@@ -1,0 +1,66 @@
+"""Shared benchmark scaffolding.
+
+Benchmarks run the REAL serving engine / kernels on reduced-config models
+(CPU container). Absolute numbers are CPU-scale; the paper's *relative*
+claims (EdgeLoRA vs llama.cpp, scaling in n/α/cv/slots) are what each
+table reproduces. Output format: ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.serving.engine import (EdgeLoRAEngine, EngineConfig,
+                                  OutOfMemoryError)
+from repro.serving.workload import WorkloadConfig, generate_trace
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def serving_cfg(n_adapters: int = 8, arch: str = "qwen2-0.5b"):
+    cfg = reduced_config(get_config(arch))
+    return dataclasses.replace(
+        cfg, lora=dataclasses.replace(cfg.lora, n_adapters=n_adapters))
+
+
+def run_policy(cfg, policy: str, *, n_slots=4, rate=5.0, duration=4.0,
+               alpha=1.0, cv=1.0, seed=0, cache_policy="lru",
+               memory_budget=1e12, top_k=3):
+    wl = WorkloadConfig(n_adapters=cfg.lora.n_adapters, alpha=alpha,
+                        request_rate=rate, cv=cv, duration=duration,
+                        input_range=(4, 24), output_range=(4, 10),
+                        vocab_size=cfg.vocab_size, seed=seed)
+    trace = generate_trace(wl)
+    ecfg = EngineConfig(n_slots=n_slots, top_k=top_k, policy=policy,
+                        max_ctx=64, prompt_buckets=(16, 32),
+                        memory_budget=memory_budget,
+                        cache_policy=cache_policy, seed=seed)
+    try:
+        engine = EdgeLoRAEngine(cfg, ecfg)
+    except OutOfMemoryError:
+        return None
+    return engine.serve(trace)
+
+
+def time_fn(fn: Callable, *args, iters: int = 5) -> float:
+    """Median wall-time in µs after one warmup call."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

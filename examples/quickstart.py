@@ -1,0 +1,70 @@
+"""Quickstart: multi-tenant Batch LoRA Inference in five minutes.
+
+Builds a small Llama-family model, registers four LoRA adapters in the
+device pool, and serves a heterogeneous batch — every request with its
+own adapter — in ONE forward pass (the paper's Fig. 6), then verifies the
+result against per-request runs.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.core.lora import LoRAMode, load_adapter_into_slot
+from repro.models import build_model
+
+
+def main() -> None:
+    cfg = reduced_config(get_config("llama3-8b"))
+    model = build_model(cfg)
+    print(f"model: {cfg.name} (reduced: {cfg.n_layers}L d={cfg.d_model})")
+
+    params = model.init(jax.random.PRNGKey(0))
+
+    # --- the heterogeneous memory manager's device face: a 4-slot pool ---
+    pool = model.init_lora(jax.random.PRNGKey(1), n_slots=4)
+    for slot in range(4):
+        adapter = model.init_lora(jax.random.PRNGKey(100 + slot))
+        adapter = jax.tree.map(  # give each adapter a distinct signature
+            lambda x: x + 0.01 * (slot + 1), adapter)
+        pool = {k: load_adapter_into_slot(pool[k], adapter[k], slot)
+                for k in pool}
+    print("adapter pool loaded: 4 slots")
+
+    # --- one batch, four different tenants ---
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0,
+                                cfg.vocab_size)
+    adapter_ids = jnp.array([0, 1, 2, 3], jnp.int32)
+    mode = LoRAMode("batched", adapter_ids, cfg.lora.scale)
+    logits, _ = model.forward(params, {"tokens": tokens}, pool, mode)
+    print(f"batched multi-adapter forward: logits {logits.shape}")
+
+    # --- verify against serving each tenant alone ---
+    worst = 0.0
+    for i in range(4):
+        mode1 = LoRAMode("batched", adapter_ids[i:i + 1], cfg.lora.scale)
+        ref, _ = model.forward(params, {"tokens": tokens[i:i + 1]}, pool,
+                               mode1)
+        err = float(jnp.max(jnp.abs(logits[i:i + 1].astype(jnp.float32)
+                                    - ref.astype(jnp.float32))))
+        worst = max(worst, err)
+    print(f"batched == per-request: max err {worst:.3e}")
+
+    # --- and a short greedy decode with per-slot adapters ---
+    cache = model.init_cache(4, 64)
+    lg, cache = model.prefill(params, {"tokens": tokens}, cache, pool, mode)
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    out = [tok]
+    for step in range(8):
+        lg, cache = model.decode_step(
+            params, tok, cache, jnp.full((4,), 16 + step, jnp.int32),
+            pool, mode)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        out.append(tok)
+    print("decoded 8 tokens/tenant:",
+          jnp.stack(out, 1)[:, :8].tolist())
+
+
+if __name__ == "__main__":
+    main()

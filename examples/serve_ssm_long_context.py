@@ -1,0 +1,58 @@
+"""Attention-free long-context serving: Mamba-2 under the EdgeLoRA engine.
+
+SSM decode carries O(1) recurrent state instead of a KV cache, so context
+length costs nothing at decode time — the property that makes the
+``long_500k`` dry-run shape trivial for mamba2/zamba2 (DESIGN.md §4).
+This driver serves a reduced Mamba-2 multi-tenant workload and then shows
+state-size independence directly.
+
+    PYTHONPATH=src python examples/serve_ssm_long_context.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.core.lora import LoRAMode
+from repro.models import build_model
+from repro.serving.engine import EdgeLoRAEngine, EngineConfig
+from repro.serving.workload import WorkloadConfig, generate_trace
+
+
+def main() -> None:
+    cfg = reduced_config(get_config("mamba2-130m"))
+    cfg = dataclasses.replace(
+        cfg, lora=dataclasses.replace(cfg.lora, n_adapters=16,
+                                      max_resident=4))
+
+    # --- multi-tenant serving on the SSM backbone ---
+    eng = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=4, max_ctx=64, prompt_buckets=(16, 32)))
+    trace = generate_trace(WorkloadConfig(
+        n_adapters=16, request_rate=4.0, duration=4.0,
+        input_range=(4, 24), output_range=(4, 10),
+        vocab_size=cfg.vocab_size, seed=0))
+    s = eng.serve(trace)
+    print(f"mamba2 multi-tenant: {s.n_completed}/{s.n_requests} done, "
+          f"throughput {s.throughput:.2f} req/s, hit {s.cache_hit_rate:.0%}")
+
+    # --- O(1) state: decode cost independent of context length ---
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    leaves = jax.tree.leaves(model.init_cache(1, 64))
+    state_bytes = sum(x.size * x.dtype.itemsize for x in leaves)
+    print(f"decode state: {state_bytes/1e3:.1f} KB — identical for 64 or "
+          f"524288 tokens of context (no KV cache)")
+
+    tok = jnp.zeros((1,), jnp.int32)
+    cache = model.init_cache(1, 64)
+    for pos in (10, 10_000, 500_000):
+        logits, cache = model.decode_step(params, tok, cache,
+                                          jnp.int32(pos))
+        print(f"decode at position {pos:7d}: logits {logits.shape}, "
+              f"state unchanged shape ✓")
+
+
+if __name__ == "__main__":
+    main()

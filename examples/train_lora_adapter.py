@@ -1,0 +1,93 @@
+"""Train the multi-tenant artifacts end-to-end:
+
+1. LoRA fine-tune two task adapters on the synthetic pipeline (a few
+   hundred steps of a ~small model — the training-side driver),
+2. train the adapter-router head on profiling data (paper §4.1),
+3. checkpoint the adapters (the serving engine's swap "disk"),
+4. verify each adapter beats the base model on its own task.
+
+    PYTHONPATH=src python examples/train_lora_adapter.py
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.core.lora import LoRAMode
+from repro.models import build_model
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.data import DataConfig, lm_batches, router_dataset
+from repro.training.router_train import router_accuracy, train_router
+from repro.training.train import (cross_entropy, init_train_state,
+                                  train_loop)
+
+
+def eval_loss(model, params, lora, batches, n=8):
+    total = 0.0
+    mode = LoRAMode("single", None, model.cfg.lora.scale) if lora else \
+        LoRAMode()
+    for _ in range(n):
+        b = next(batches)
+        toks = jnp.asarray(b["tokens"])
+        logits, _ = model.forward(params, {"tokens": toks[:, :-1]}, lora,
+                                  mode)
+        total += float(cross_entropy(logits, toks[:, 1:]))
+    return total / n
+
+
+def main() -> None:
+    cfg = reduced_config(get_config("llama3-8b"))
+    model = build_model(cfg)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=48, batch_size=8)
+    steps = 200
+
+    # shared frozen base
+    state0 = init_train_state(model, jax.random.PRNGKey(0))
+    adapters = {}
+    for task in (0, 1):
+        print(f"--- fine-tuning adapter for task {task} ({steps} steps) ---")
+        state, hist = train_loop(
+            model, lm_batches(dc, task=task), steps,
+            state=init_train_state(model, jax.random.PRNGKey(0)),
+            peak_lr=5e-3, log_every=50)
+        adapters[task] = state.lora
+
+    base_params = state0.params
+    print("\n--- per-task evaluation (loss; lower is better) ---")
+    for task in (0, 1):
+        ev = lm_batches(DataConfig(vocab_size=cfg.vocab_size, seq_len=48,
+                                   batch_size=8, seed=999), task=task)
+        base = eval_loss(model, base_params, None, ev)
+        for a in (0, 1):
+            ev2 = lm_batches(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=48, batch_size=8,
+                                        seed=999), task=task)
+            la = eval_loss(model, base_params, adapters[a], ev2)
+            tag = "«match»" if a == task else ""
+            print(f"task {task}: adapter{a} {la:.4f} vs base {base:.4f} {tag}")
+
+    print("\n--- adapter router (BCE multi-label head) ---")
+    prompts, labels, _ = router_dataset(dc, n_adapters=4, n_samples=240)
+    head, bce = train_router(model, base_params, prompts[:192],
+                             labels[:192], epochs=6, batch_size=16, lr=3e-3)
+    acc = router_accuracy(model, base_params, head, prompts[192:],
+                          labels[192:])
+    print(f"router top-1 suitable accuracy: {acc:.3f} (chance "
+          f"{labels.mean():.3f})")
+
+    with tempfile.TemporaryDirectory() as d:
+        for task, lora_tree in adapters.items():
+            p = os.path.join(d, f"adapter_task{task}.npz")
+            save_checkpoint(p, lora_tree)
+            back = load_checkpoint(p, lora_tree)
+            assert all(
+                bool(jnp.all(a == b)) for a, b in
+                zip(jax.tree.leaves(lora_tree), jax.tree.leaves(back)))
+            print(f"adapter {task} checkpointed to {p} "
+                  f"({os.path.getsize(p)/1e6:.1f} MB) and verified")
+
+
+if __name__ == "__main__":
+    main()

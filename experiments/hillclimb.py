@@ -1,0 +1,80 @@
+"""§Perf hillclimb driver: baseline + variants for the three selected pairs.
+
+Run: PYTHONPATH=src python experiments/hillclimb.py [pair]
+"""
+import sys
+
+sys.argv = [sys.argv[0]]  # keep dryrun's env setup happy
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.dryrun import run_combo
+
+
+def show(tag, r):
+    t = r["roofline"]
+    print(f"{tag:42s} comp={t['compute_s']*1e6:10.1f}µs "
+          f"mem={t['memory_s']*1e6:10.1f}µs "
+          f"coll={t['collective_s']*1e6:10.1f}µs "
+          f"dom={r['dominant']:13s} useful={r['useful_flops_ratio']:.3f}")
+    return r
+
+
+def pair1():
+    """llama4 decode_32k: worst useful ratio (MoE capacity waste)."""
+    show("llama4/decode_32k BASELINE (paper-faithful)",
+         run_combo("llama4-maverick-400b-a17b", "decode_32k",
+                   verbose=False, variant="baseline"))
+    show("llama4/decode_32k +gather-MoE",
+         run_combo("llama4-maverick-400b-a17b", "decode_32k",
+                   config_patch={"moe": {"gather_threshold": 4096}},
+                   verbose=False, variant="gatherMoE"))
+    show("llama4/decode_32k +gather-MoE +int8KV",
+         run_combo("llama4-maverick-400b-a17b", "decode_32k",
+                   config_patch={"moe": {"gather_threshold": 4096},
+                                 "attn": {"kv_cache_quant": True}},
+                   verbose=False, variant="gatherMoE_int8kv"))
+
+
+def pair2():
+    """mamba2 decode_32k: most collective-bound (FSDP weight gathers)."""
+    show("mamba2/decode_32k BASELINE (paper-faithful)",
+         run_combo("mamba2-130m", "decode_32k", verbose=False,
+                   variant="baseline"))
+    show("mamba2/decode_32k +replicate-small-weights",
+         run_combo("mamba2-130m", "decode_32k",
+                   rules_patch={"replicate_below": 64e6},
+                   verbose=False, variant="replsmall"))
+    show("mamba2/decode_32k +repl +no-model-shard(tiny d)",
+         run_combo("mamba2-130m", "decode_32k",
+                   rules_patch={"replicate_below": 64e6,
+                                "ssm_inner": None, "ssm_heads": None},
+                   verbose=False, variant="replsmall_nomodel"))
+
+
+def pair3():
+    """qwen2 decode_32k: paper-representative multi-tenant edge decode."""
+    show("qwen2/decode_32k BASELINE (paper-faithful)",
+         run_combo("qwen2-0.5b", "decode_32k", verbose=False,
+                   variant="baseline"))
+    show("qwen2/decode_32k +int8 KV cache",
+         run_combo("qwen2-0.5b", "decode_32k",
+                   config_patch={"attn": {"kv_cache_quant": True}},
+                   verbose=False, variant="int8kv"))
+    show("qwen2/decode_32k +int8KV +replicate-small",
+         run_combo("qwen2-0.5b", "decode_32k",
+                   config_patch={"attn": {"kv_cache_quant": True}},
+                   rules_patch={"replicate_below": 64e6},
+                   verbose=False, variant="int8kv_replsmall"))
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    import sys as _s
+    which = os.environ.get("PAIR", "all")
+    if which in ("all", "1"):
+        pair1()
+    if which in ("all", "2"):
+        pair2()
+    if which in ("all", "3"):
+        pair3()

@@ -1,0 +1,144 @@
+"""Heterogeneous memory management (paper §3.3 / §4.2).
+
+Two cooperating structures, exactly as in the paper:
+
+* **Memory cache** — an LRU map adapter_id → pool slot. Frequently used
+  adapters stay resident; when full, the least-recently-used adapter is
+  evicted and its block returns to the pool.
+* **Pre-allocated memory pool** — ``max_resident`` fixed-size blocks
+  reserved at init (the paper's ``std::stack<std::shared_ptr<adapter>>``).
+  A block here is a *slot index* into the stacked device tensors
+  ``A_stack[R, ...]`` (see ``core/lora.py``): loading an adapter is an
+  in-place ``dynamic_update_index_in_dim`` — no allocation, no recompile.
+
+The device-side write is delegated to a callable so this module stays pure
+bookkeeping (unit-testable without jax); the engine wires it to
+``load_adapter_into_slot``.
+
+Swap-in cost is modeled as ``adapter_bytes / disk_bandwidth`` sim-seconds
+(the paper's disk→RAM swap; here host→HBM).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    loads: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class AdapterMemoryManager:
+    """LRU cache over a fixed pool of adapter slots.
+
+    policy: 'lru' (paper default) or 'lfu' (paper §4.2 notes LFU can win
+    under strong locality — both provided, benchmarked in the locality
+    ablation).
+    """
+
+    def __init__(self, max_resident: int,
+                 load_fn: Optional[Callable[[int, int], None]] = None,
+                 policy: str = "lru"):
+        assert policy in ("lru", "lfu")
+        self.max_resident = max_resident
+        self.policy = policy
+        self.load_fn = load_fn or (lambda adapter_id, slot: None)
+        # pool of free blocks (paper: std::stack of pre-allocated blocks)
+        self.free_slots: List[int] = list(range(max_resident))[::-1]
+        # adapter_id -> slot; ordered for LRU recency
+        self.resident: "collections.OrderedDict[int, int]" = collections.OrderedDict()
+        self.use_counts: Dict[int, int] = collections.defaultdict(int)
+        self.pinned: Dict[int, int] = collections.defaultdict(int)
+        self.stats = CacheStats()
+
+    # -- queries ---------------------------------------------------------
+
+    def __contains__(self, adapter_id: int) -> bool:
+        return adapter_id in self.resident
+
+    def slot_of(self, adapter_id: int) -> Optional[int]:
+        return self.resident.get(adapter_id)
+
+    @property
+    def n_resident(self) -> int:
+        return len(self.resident)
+
+    # -- pinning (adapters in use by an active slot must not evict) ------
+
+    def pin(self, adapter_id: int) -> None:
+        self.pinned[adapter_id] += 1
+
+    def unpin(self, adapter_id: int) -> None:
+        self.pinned[adapter_id] -= 1
+        if self.pinned[adapter_id] <= 0:
+            del self.pinned[adapter_id]
+
+    # -- core operation ---------------------------------------------------
+
+    def acquire(self, adapter_id: int) -> tuple:
+        """Ensure ``adapter_id`` is resident; returns (slot, loaded:bool).
+
+        loaded=True means a swap-in happened (the caller charges the load
+        latency). Raises RuntimeError when every block is pinned.
+        """
+        if adapter_id in self.resident:
+            self.stats.hits += 1
+            self._touch(adapter_id)
+            return self.resident[adapter_id], False
+        self.stats.misses += 1
+        if not self.free_slots:
+            victim = self._pick_victim()
+            if victim is None:
+                raise RuntimeError(
+                    "adapter pool exhausted: all resident adapters pinned")
+            slot = self.resident.pop(victim)
+            self.free_slots.append(slot)
+            self.stats.evictions += 1
+        slot = self.free_slots.pop()
+        self.load_fn(adapter_id, slot)
+        self.stats.loads += 1
+        self.resident[adapter_id] = slot
+        self._touch(adapter_id)
+        return slot, True
+
+    def prefill_random(self, adapter_ids: List[int]) -> None:
+        """Paper §4.2: the cache is prefilled with adapters at server init."""
+        for a in adapter_ids[: self.max_resident]:
+            if a not in self.resident and self.free_slots:
+                slot = self.free_slots.pop()
+                self.load_fn(a, slot)
+                self.stats.loads += 1
+                self.resident[a] = slot
+
+    # -- internals --------------------------------------------------------
+
+    def _touch(self, adapter_id: int) -> None:
+        self.use_counts[adapter_id] += 1
+        if self.policy == "lru":
+            self.resident.move_to_end(adapter_id)
+
+    def _pick_victim(self) -> Optional[int]:
+        if self.policy == "lru":
+            for aid in self.resident:  # oldest first
+                if aid not in self.pinned:
+                    return aid
+            return None
+        # lfu
+        best, best_count = None, None
+        for aid in self.resident:
+            if aid in self.pinned:
+                continue
+            c = self.use_counts[aid]
+            if best_count is None or c < best_count:
+                best, best_count = aid, c
+        return best

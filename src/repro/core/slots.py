@@ -1,0 +1,80 @@
+"""Slot state machine (paper §4, Fig. 7).
+
+A fixed number of slots bounds concurrency (and therefore batch shapes —
+static shapes mean no XLA recompilation at runtime). Each slot walks:
+
+    IDLE -> SELECTING -> PREFILL -> GENERATE -> IDLE
+
+SELECTING runs Algorithm 1 (adaptive adapter selection) unless the request
+pins an adapter explicitly; PREFILL decodes the prompt and emits the first
+token; GENERATE iterates until the request's output length.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class SlotState(enum.Enum):
+    IDLE = "idle"
+    SELECTING = "selecting"
+    PREFILL = "prefill"
+    GENERATE = "generate"
+
+
+@dataclass
+class Request:
+    request_id: int
+    arrival_time: float
+    prompt_len: int
+    output_len: int
+    # explicit adapter (bypasses adaptive selection) or None
+    adapter_id: Optional[int] = None
+    # ground-truth best adapter (workload synthesis; the router predicts it)
+    true_adapter: Optional[int] = None
+    prompt_tokens: Optional[object] = None  # jnp [prompt_len] int32
+
+    # filled during serving
+    selected_adapter: Optional[int] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    generated: int = 0
+
+
+@dataclass
+class Slot:
+    index: int
+    state: SlotState = SlotState.IDLE
+    request: Optional[Request] = None
+    pos: int = 0                 # next token position
+    adapter_slot: int = 0        # pool slot of the active adapter
+    last_token: int = 0
+
+    def assign(self, req: Request) -> None:
+        assert self.state == SlotState.IDLE
+        self.request = req
+        self.state = SlotState.SELECTING
+        self.pos = 0
+
+    def release(self) -> Request:
+        req = self.request
+        self.request = None
+        self.state = SlotState.IDLE
+        self.pos = 0
+        return req
+
+
+class SlotManager:
+    def __init__(self, n_slots: int):
+        self.slots = [Slot(i) for i in range(n_slots)]
+
+    def idle(self) -> List[Slot]:
+        return [s for s in self.slots if s.state == SlotState.IDLE]
+
+    def in_state(self, state: SlotState) -> List[Slot]:
+        return [s for s in self.slots if s.state == state]
+
+    @property
+    def any_active(self) -> bool:
+        return any(s.state != SlotState.IDLE for s in self.slots)

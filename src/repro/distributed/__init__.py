@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    LOGICAL_RULES,
+    logical_constraint,
+    param_specs,
+    set_mesh,
+    spec_for,
+    use_mesh,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "logical_constraint",
+    "param_specs",
+    "set_mesh",
+    "spec_for",
+    "use_mesh",
+]

@@ -1,0 +1,273 @@
+"""Logical-axis sharding for the framework (MaxText-style, self-contained).
+
+Model code annotates activations with *logical* axis names via
+``logical_constraint(x, 'batch', 'seq', None)``; parameters get logical axes
+from path-based rules in ``param_specs``. A mesh context maps logical names
+to physical mesh axes with divisibility checks (a rule that does not divide
+the dimension is dropped rather than crashing — e.g. kv_heads=8 on a
+model=16 axis falls back to replicated heads).
+
+Outside a mesh context everything is the identity, so the same model code
+runs on the 1-CPU test path and the 512-device dry-run path unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> physical mesh axis (or tuple of axes). The 'pod' axis
+# extends data parallelism so pod-crossing traffic is batch-only.
+LOGICAL_RULES: Dict[str, Union[str, Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,            # sequence kept unsharded by default (see §Perf)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "expert": "model",
+    "embed": None,           # d_model replicated by default (Megatron TP)
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "fsdp": "data",         # weight sharding over data (ZeRO-3 / 2D TP)
+    "head_dim": "model",    # KV-cache fallback when kv_heads < model axis
+    # §Perf lever: shard the KV cache on its SEQUENCE dim instead —
+    # distributed flash-decode: per-shard partial softmax + tiny psums
+    # instead of all-reducing [B, H, C] scores. Off by default; enable
+    # with rules_patch={'kv_seq': 'model'}.
+    "kv_seq": None,
+}
+
+
+class _MeshState(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Any] = dict(LOGICAL_RULES)
+
+
+_STATE = _MeshState()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, Any]] = None) -> None:
+    _STATE.mesh = mesh
+    _STATE.rules = dict(LOGICAL_RULES if rules is None else rules)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, Any]] = None):
+    prev = (_STATE.mesh, _STATE.rules)
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def _axis_size(mesh: Mesh, phys: Union[str, Tuple[str, ...]]) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, str):
+        phys = (phys,)
+    n = 1
+    for p in phys:
+        if p in mesh.shape:
+            n *= mesh.shape[p]
+        else:
+            return 0  # physical axis absent from this mesh -> unusable rule
+    return n
+
+
+def _resolve(mesh: Mesh, rules: Dict[str, Any], logical: Optional[str],
+             dim: int) -> Optional[Union[str, Tuple[str, ...]]]:
+    """Map one logical axis to mesh axes, dropping non-dividing rules."""
+    if logical is None:
+        return None
+    phys = rules.get(logical)
+    if phys is None:
+        return None
+    size = _axis_size(mesh, phys)
+    if size == 0:
+        # drop axes that aren't in the mesh (e.g. 'pod' on single-pod)
+        if isinstance(phys, tuple):
+            phys = tuple(p for p in phys if p in mesh.shape)
+            if not phys:
+                return None
+            size = _axis_size(mesh, phys)
+        else:
+            return None
+    if size == 0 or dim % size != 0:
+        # try progressively smaller prefixes of a tuple rule
+        if isinstance(phys, tuple) and len(phys) > 1:
+            for cut in range(len(phys) - 1, 0, -1):
+                sub = phys[:cut]
+                s = _axis_size(mesh, sub)
+                if s and dim % s == 0:
+                    return sub if len(sub) > 1 else sub[0]
+        return None
+    return phys
+
+
+def spec_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Dict[str, Any]] = None) -> P:
+    mesh = mesh or _STATE.mesh
+    rules = rules or _STATE.rules
+    if mesh is None:
+        return P()
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set = set()
+    parts = []
+    for dim, logical in zip(shape, logical_axes):
+        phys = _resolve(mesh, rules, logical, dim)
+        # each mesh axis may appear at most once in a spec
+        flat = (phys,) if isinstance(phys, str) else (phys or ())
+        if phys is not None and not any(f in used for f in flat):
+            used.update(flat)
+            parts.append(phys)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def logical_constraint(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; identity without a mesh.
+
+    Tolerates rank mismatch by dropping *middle* axes — the same model code
+    annotates [B, S, ...] (prefill/train) and [B, ...] (decode) tensors.
+    """
+    mesh = _STATE.mesh
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        if x.ndim < len(logical_axes):
+            keep_tail = x.ndim - 1
+            logical_axes = ((logical_axes[0],) + logical_axes[
+                len(logical_axes) - keep_tail:]) if keep_tail else (
+                logical_axes[0],)
+        else:
+            logical_axes = logical_axes + (None,) * (x.ndim - len(logical_axes))
+    spec = spec_for(x.shape, logical_axes, mesh, _STATE.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-regex -> logical axes for trailing dims).
+# Leading stacked dims (layers / groups / pattern slots / adapter slots) are
+# replicated; rules describe the *trailing* canonical dims of each leaf.
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # ---- serving caches (see models/attention.py, models/ssm.py) ----
+    # KV ring caches [.., B, C, KH, hd]; positions [.., B, C].
+    # kv_heads rarely divides the model axis (GQA kv=2..8 vs model=16), so
+    # the head_dim fallback keeps the cache model-sharded for memory.
+    (r"(^|/)(k|v|cross_k|cross_v)$",
+     ("batch", "kv_seq", "kv_heads", "head_dim")),
+    (r"(^|/)(k_scale|v_scale)$", ("batch", "kv_seq", "kv_heads")),
+    (r"(^|/)pos$", ("batch", "kv_seq")),
+    # SSM recurrent state [.., B, H, P, N]; conv window [.., B, w, C]
+    (r"(^|/)state$", ("batch", "ssm_heads", None, None)),
+    (r"(^|/)conv$", ("batch", None, "ssm_inner")),
+    # ---- LoRA adapter pool. The shrink x·Aᵀ contracts d_in: sharding
+    # A's d_in on the MODEL axis makes it a local partial-sum plus a tiny
+    # [B, r] psum (sharding it on fsdp instead forces a full A all-gather
+    # per layer — measured as the dominant decode collective, §Perf).
+    # B for q/k/v/up rides the base projection's head sharding so the
+    # expand is local; o/down B stays replicated (d·r·R is ~MBs). ----
+    (r"/(q|k|v|up|gate|in_proj)/B$", ("heads", None)),
+    (r"/(o|down|out_proj)/B$", (None, None)),
+    (r"/A$", (None, "heads")),
+    # embeddings / lm head
+    (r"embed$", ("vocab", None)),
+    (r"lm_head$", (None, "vocab")),
+    (r"pos_embed$", (None, None)),
+    # attention projections: [d_model, H*hd] / [H*hd, d_model] — 2D
+    # sharded (fsdp on the contracting dim, tensor on heads/ff) so 100B+
+    # weights fit per chip; GSPMD turns the contraction into activation
+    # movement rather than weight gathers when that is cheaper.
+    (r"(wq|wk|wv)$", ("fsdp", "heads")),
+    (r"(bq|bk|bv)$", ("heads",)),
+    (r"wo$", ("heads", "fsdp")),
+    # MoE: experts stacked on an 'expert'-sharded leading dim (must match
+    # before the generic MLP rules below)
+    (r"experts/(up|gate)$", ("expert", "fsdp", "ff")),
+    (r"experts/down$", ("expert", "ff", "fsdp")),
+    (r"router$", (None, None)),
+    # MLP
+    (r"(up|gate)$", ("fsdp", "ff")),
+    (r"down$", ("ff", "fsdp")),
+    # Mamba2 / SSD
+    (r"in_proj$", ("fsdp", "ssm_inner")),
+    (r"out_proj$", ("ssm_inner", "fsdp")),
+    (r"conv_w$", (None, "ssm_inner")),
+    (r"conv_b$", ("ssm_inner",)),
+    (r"(A_log|D|dt_bias)$", ("ssm_heads",)),
+    # norms & scalars
+    (r"(ln|norm|scale|post|q_norm|k_norm)", (None,)),
+)
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               rules: Dict[str, Any], itemsize: int = 2) -> P:
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path):
+            # pad leading stacked dims with None
+            n_lead = len(shape) - len(logical)
+            if n_lead < 0:
+                # leaf has fewer dims than rule (e.g. unstacked scalar)
+                logical = logical[-len(shape):] if len(shape) else ()
+                n_lead = 0
+            axes = (None,) * n_lead + tuple(logical)
+            # §Perf lever: small weights skip fsdp sharding — replicating
+            # them removes the per-step weight all-gathers that dominate
+            # small-model decode (rules['replicate_below'] = global bytes)
+            threshold = rules.get("replicate_below", 0)
+            if threshold:
+                nbytes = itemsize
+                for d in shape:
+                    nbytes *= d
+                if nbytes < threshold:
+                    axes = tuple(None if a == "fsdp" else a for a in axes)
+            return spec_for(shape, axes, mesh, rules)
+    return P()  # replicate by default
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def param_specs(tree: Any, mesh: Optional[Mesh] = None,
+                rules: Optional[Dict[str, Any]] = None) -> Any:
+    """PartitionSpec pytree for a (shape-)pytree of params by path rules."""
+    mesh = mesh or _STATE.mesh
+    rules = rules or _STATE.rules
+
+    def _one(path, leaf):
+        shape = leaf.shape if hasattr(leaf, "shape") else ()
+        if mesh is None:
+            return P()
+        itemsize = leaf.dtype.itemsize if hasattr(leaf, "dtype") else 2
+        return _leaf_spec(_path_str(path), tuple(shape), mesh, rules,
+                          itemsize)
+
+    return jax.tree_util.tree_map_with_path(_one, tree)
+
+
+def named_sharding_tree(tree: Any, mesh: Mesh,
+                        rules: Optional[Dict[str, Any]] = None) -> Any:
+    specs = param_specs(tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

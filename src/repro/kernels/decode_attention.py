@@ -1,0 +1,149 @@
+"""Flash-decode Pallas kernel: single-token attention over a ring KV cache.
+
+The serving engine's decode step is memory-bound: every step streams the
+whole KV cache past one query token. This kernel walks the cache in
+``blk_c`` tiles with an online softmax (m, l, acc in VMEM scratch), so HBM
+traffic is exactly one pass over K and V and the [C]-sized score matrix
+never materializes.
+
+Masking is position-based (matching the ring-cache layout in
+``models/attention.py``): a stored-position tile accompanies each KV tile;
+entries are valid iff ``0 ≤ kv_pos ≤ q_pos`` and within the sliding window
+/ chunk when configured. The query position arrives via scalar prefetch.
+
+Grid: (B, KH, C/blk_c) — batch × kv-head are parallel axes, the cache walk
+is the sequential innermost axis so the scratch carry is legal.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, nc: int, scale: float,
+                        window: Optional[int], chunked: bool,
+                        softcap: Optional[float],
+                        ks_ref=None, vs_ref=None):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]          # [G, hd]
+    k = k_ref[0, :, 0]       # [blk_c, hd]
+    v = v_ref[0, :, 0]       # [blk_c, hd]
+    if ks_ref is not None:   # fused int8 dequant: HBM moves int8+scales,
+        # the widened f32 tile exists only in VMEM (the treatment the
+        # pure-JAX path cannot get from XLA at large KH·hd — §Perf Pair A)
+        k = k.astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+        v = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+    kpos = pos_ref[0]        # [blk_c]
+    qpos = qpos_ref[0]
+
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [G, blk_c]
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kpos >= 0) & (kpos <= qpos)
+    if window is not None:
+        if chunked:
+            valid &= (qpos // window) == (kpos // window)
+        else:
+            valid &= (qpos - kpos) < window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v.astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nc - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kv_pos: jax.Array, q_pos: jax.Array, *,
+                 k_scale: Optional[jax.Array] = None,
+                 v_scale: Optional[jax.Array] = None,
+                 window: Optional[int] = None, chunked: bool = False,
+                 softcap: Optional[float] = None, blk_c: int = 512,
+                 interpret: bool = False) -> jax.Array:
+    """q: [B, H, hd]; k, v: [B, C, KH, hd]; kv_pos: [B, C] int32;
+    q_pos: scalar int32. Returns [B, H, hd] in q.dtype.
+
+    With ``k_scale``/``v_scale`` ([B, C, KH] f32-castable), k/v are int8
+    and dequantized inside the kernel (fused Q8_0-style cache read)."""
+    b, h, hd = q.shape
+    c, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    blk_c = min(blk_c, c)
+    assert c % blk_c == 0, (c, blk_c)
+    nc = c // blk_c
+    qg = q.reshape(b, kh, g, hd)
+    qpos_arr = jnp.asarray(q_pos, jnp.int32).reshape(1)
+    quant = k_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda i, hh, j, qp: (i, hh, 0, 0)),
+        pl.BlockSpec((1, blk_c, 1, hd), lambda i, hh, j, qp: (i, j, hh, 0)),
+        pl.BlockSpec((1, blk_c, 1, hd), lambda i, hh, j, qp: (i, j, hh, 0)),
+        pl.BlockSpec((1, blk_c), lambda i, hh, j, qp: (i, j)),
+    ]
+    operands = [qg, k, v, kv_pos]
+    kernel = functools.partial(_decode_attn_kernel, nc=nc, scale=hd ** -0.5,
+                               window=window, chunked=chunked,
+                               softcap=softcap)
+    if quant:
+        scale_spec = pl.BlockSpec((1, blk_c, 1),
+                                  lambda i, hh, j, qp: (i, j, hh))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
+
+        def kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, ks_ref, vs_ref,
+                   o_ref, m_ref, l_ref, acc_ref):
+            _decode_attn_kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref,
+                                o_ref, m_ref, l_ref, acc_ref, nc=nc,
+                                scale=hd ** -0.5, window=window,
+                                chunked=chunked, softcap=softcap,
+                                ks_ref=ks_ref, vs_ref=vs_ref)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, nc),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, hh, j, qp: (i, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        interpret=interpret,
+    )(qpos_arr, *operands)
+    return out.reshape(b, h, hd)

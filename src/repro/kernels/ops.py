@@ -1,0 +1,117 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``sgmv`` implements the complete Batch LoRA Inference data path of the
+paper's Fig. 6: gather tokens into adapter-homogeneous u-batches (sorted +
+padded to the kernel block size), run the grouped shrink/expand GEMMs, and
+scatter results back to the original batch order. Everything is static-
+shaped (jit-friendly): the padded token count is bounded by
+``T + R·(blk_t-1)`` rounded up, where R = pool slots.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.sgmv import DEFAULT_BLK_T, sgmv_expand, sgmv_shrink
+
+
+class Grouping(NamedTuple):
+    """Static-shaped u-batch layout for a batch of per-token adapter slots."""
+
+    padded_pos: jax.Array   # [T] position of each (sorted) token in padded buf
+    perm: jax.Array         # [T] sort permutation (tokens grouped by slot)
+    block_slots: jax.Array  # [nb] adapter slot owning each kernel block
+    n_padded: int           # nb * blk_t (static)
+
+
+def plan_grouping(token_slots: jax.Array, n_slots: int,
+                  blk_t: int = DEFAULT_BLK_T) -> Grouping:
+    """Compute the gather/scatter plan for ``token_slots`` [T] int32.
+
+    Tokens are sorted by slot; each slot's run is padded to a multiple of
+    blk_t so every kernel block is adapter-homogeneous. Worst-case padded
+    size (static): ceil(T/blk_t)·blk_t + n_slots·blk_t.
+    """
+    t = token_slots.shape[0]
+    nb = -(-t // blk_t) + n_slots  # static upper bound on #blocks
+    n_padded = nb * blk_t
+
+    perm = jnp.argsort(token_slots, stable=True)
+    sorted_slots = token_slots[perm]
+    # per-slot counts and padded layout offsets
+    counts = jnp.bincount(token_slots, length=n_slots)          # [R]
+    padded_counts = -(-counts // blk_t) * blk_t                 # [R]
+    starts = jnp.concatenate([jnp.zeros((1,), padded_counts.dtype),
+                              jnp.cumsum(padded_counts)[:-1]])  # [R]
+    # rank of each sorted token within its slot run
+    idx = jnp.arange(t)
+    run_start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                 jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    rank = idx - run_start[sorted_slots]
+    padded_pos = starts[sorted_slots].astype(jnp.int32) + rank.astype(jnp.int32)
+    # slot owning each block (blocks beyond the last used one point at the
+    # last slot; they process zero-padding and are scattered nowhere)
+    block_starts = starts // blk_t                               # [R]
+    block_ids = jnp.arange(nb)
+    # block b belongs to slot g iff block_starts[g] <= b < block_starts[g] +
+    # padded_counts[g]/blk_t ; searchsorted over the cumulative block counts
+    cum_blocks = jnp.cumsum(padded_counts // blk_t)
+    block_slots = jnp.searchsorted(cum_blocks, block_ids, side="right")
+    block_slots = jnp.clip(block_slots, 0, n_slots - 1).astype(jnp.int32)
+    return Grouping(padded_pos, perm, block_slots, n_padded)
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "blk_t", "blk_d",
+                                             "interpret", "use_kernel"))
+def sgmv(x: jax.Array, a_stack: jax.Array, b_stack: jax.Array,
+         token_slots: jax.Array, scale: float, *, n_slots: int,
+         blk_t: int = DEFAULT_BLK_T, blk_d: int = 512,
+         interpret: bool = True, use_kernel: bool = True) -> jax.Array:
+    """Grouped LoRA delta for a heterogeneous-adapter batch.
+
+    x: [T, d_in]; a_stack: [R, r, d_in]; b_stack: [R, d_out, r];
+    token_slots: [T] int32 in [0, R). Returns [T, d_out] = scale·B_s(A_s x).
+
+    use_kernel=False falls back to the ref gather-einsum (the baseline the
+    benchmarks compare against).
+    """
+    if not use_kernel:
+        return (scale * ref.sgmv_ref(x, a_stack, b_stack, token_slots, 1.0)
+                ).astype(x.dtype)
+    t, d_in = x.shape
+    plan = plan_grouping(token_slots, n_slots, blk_t)
+    # gather into padded u-batch layout (the paper's Fig. 6 gather)
+    xbuf = jnp.zeros((plan.n_padded, d_in), x.dtype)
+    xbuf = xbuf.at[plan.padded_pos].set(x[plan.perm])
+    s = sgmv_shrink(xbuf, a_stack, plan.block_slots, blk_t=blk_t,
+                    blk_d=min(blk_d, d_in), interpret=interpret)
+    y = sgmv_expand(s, b_stack, plan.block_slots, blk_t=blk_t,
+                    blk_d=min(blk_d, b_stack.shape[1]), interpret=interpret)
+    # scatter back to original order (Fig. 6 scatter)
+    y_sorted = y[plan.padded_pos]
+    out = jnp.zeros((t, b_stack.shape[1]), y.dtype).at[plan.perm].set(y_sorted)
+    return (scale * out).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "chunked", "softcap",
+                                             "blk_c", "interpret",
+                                             "use_kernel"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_pos: jax.Array, q_pos: jax.Array, *,
+                     window: Optional[int] = None, chunked: bool = False,
+                     softcap: Optional[float] = None, blk_c: int = 512,
+                     interpret: bool = True, use_kernel: bool = True
+                     ) -> jax.Array:
+    """Flash-decode over the ring cache (see decode_attention.py)."""
+    if not use_kernel:
+        return ref.decode_attention_ref(q, k, v, kv_pos, q_pos,
+                                        window=window, chunked=chunked,
+                                        softcap=softcap)
+    return flash_decode(q, k, v, kv_pos, q_pos, window=window,
+                        chunked=chunked, softcap=softcap, blk_c=blk_c,
+                        interpret=interpret)

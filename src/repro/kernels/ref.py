@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle; the
+benchmarks use these as the unfused baseline.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sgmv_shrink_ref(x: jax.Array, a_stack: jax.Array,
+                    token_slots: jax.Array) -> jax.Array:
+    """x: [T, d_in]; a_stack: [R, r, d_in]; token_slots: [T] int32.
+
+    Returns [T, r] = x_t · A[slot_t]ᵀ (f32)."""
+    a_sel = a_stack[token_slots]  # [T, r, d_in]
+    return jnp.einsum("td,trd->tr", x.astype(jnp.float32),
+                      a_sel.astype(jnp.float32))
+
+
+def sgmv_expand_ref(s: jax.Array, b_stack: jax.Array,
+                    token_slots: jax.Array) -> jax.Array:
+    """s: [T, r]; b_stack: [R, d_out, r]; token_slots: [T] int32.
+
+    Returns [T, d_out] = s_t · B[slot_t]ᵀ (f32)."""
+    b_sel = b_stack[token_slots]  # [T, d_out, r]
+    return jnp.einsum("tr,tor->to", s.astype(jnp.float32),
+                      b_sel.astype(jnp.float32))
+
+
+def sgmv_ref(x: jax.Array, a_stack: jax.Array, b_stack: jax.Array,
+             token_slots: jax.Array, scale: float) -> jax.Array:
+    """Full grouped LoRA delta: scale · B[slot](A[slot] x)."""
+    return scale * sgmv_expand_ref(
+        sgmv_shrink_ref(x, a_stack, token_slots), b_stack, token_slots)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_pos: jax.Array, q_pos: jax.Array, *,
+                         window: Optional[int] = None,
+                         chunked: bool = False,
+                         softcap: Optional[float] = None) -> jax.Array:
+    """Single-token attention over a ring cache.
+
+    q: [B, H, hd]; k, v: [B, C, KH, hd]; kv_pos: [B, C] (-1 = empty);
+    q_pos: scalar. Returns [B, H, hd] (f32 accumulate, q dtype out)."""
+    b, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, hd)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window is not None:
+        if chunked:
+            valid &= (q_pos // window) == (kv_pos // window)
+        else:
+            valid &= (q_pos - kv_pos) < window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,358 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production mesh, with zero device allocation.
+
+For each combo this builds the appropriate step function —
+
+    train_4k     → LoRA fine-tune train_step (frozen base, AdamW on LoRA)
+    prefill_32k  → prefill_step (prompt pass + KV/state cache fill,
+                   multi-tenant LoRA pool in batched mode)
+    decode_32k / long_500k → serve_step (one token over a seq_len cache)
+
+— lowers it with ShapeDtypeStruct inputs carrying NamedShardings from the
+logical-axis rules, compiles, and records memory_analysis /
+cost_analysis / parsed collective bytes for §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.lora import LoRAMode
+from repro.distributed.sharding import param_specs, use_mesh
+from repro.launch.analysis import jaxpr_cost, parse_hlo_collectives
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh, roofline_terms)
+from repro.models import build_model
+from repro.training.optimizer import adamw_init
+from repro.training.train import TrainState, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# long_500k applicability (DESIGN.md §4): SSM/hybrid + local-attention archs
+LONG_OK = {a: get_config(a).supports_long_context for a in ARCH_IDS}
+
+
+def _sds(tree: Any, mesh, rules=None) -> Any:
+    """shape tree -> ShapeDtypeStruct tree with NamedShardings attached."""
+    specs = param_specs(tree, mesh, rules)
+    return jax.tree.map(
+        lambda leaf, spec: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, spec)),
+        tree, specs)
+
+
+def _sds_simple(shape, dtype, mesh, spec: P) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_spec(mesh, batch: int) -> P:
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return P(tuple(axes)) if axes and batch % n == 0 else P()
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                opts: Optional[Dict] = None) -> Tuple[Any, Dict[str, Any]]:
+    """Build (step_fn, kwargs-of-ShapeDtypeStructs) for one combo."""
+    opts = dict(opts or {})
+    model = build_model(cfg)
+    bspec = _batch_spec(mesh, shape.global_batch)
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_sds = _sds(params_shapes, mesh)
+
+    if shape.kind == "train":
+        lora_shapes = jax.eval_shape(model.init_lora, jax.random.PRNGKey(0))
+        opt_shapes = jax.eval_shape(adamw_init, lora_shapes)
+        state_sds = TrainState(params_sds, _sds(lora_shapes, mesh),
+                               jax.tree.map(
+                                   lambda x: x, adamw_sds(opt_shapes, mesh)))
+        tokens = _sds_simple((shape.global_batch, shape.seq_len + 1),
+                             jnp.int32, mesh, bspec + P(None))
+        batch = {"tokens": tokens}
+        if cfg.encoder is not None:
+            batch["frames"] = _sds_simple(
+                (shape.global_batch, cfg.encoder.n_frames, cfg.d_model),
+                jnp.bfloat16, mesh, bspec + P(None, None))
+        step = make_train_step(model, remat=opts.pop("remat", True))
+
+        def train_step(state, batch):
+            return step(state, batch)
+
+        return train_step, {"state": state_sds, "batch": batch}
+
+    # ---- serving paths: multi-tenant LoRA pool in batched mode ----
+    n_pool = cfg.lora.max_resident
+    # serving pool is bf16 (the paper serves Q8/Q4-quantized adapters;
+    # training uses f32 LoRA — see DESIGN.md §8)
+    pool_shapes = jax.eval_shape(
+        lambda k: model.init_lora(k, n_slots=n_pool, dtype=jnp.bfloat16),
+        jax.random.PRNGKey(0))
+    pool_sds = _sds(pool_shapes, mesh)
+    scale = cfg.lora.scale
+
+    if shape.kind == "prefill":
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cache_sds = _sds(cache_shapes, mesh)
+        tokens = _sds_simple((shape.global_batch, shape.seq_len), jnp.int32,
+                             mesh, bspec + P(None))
+        slot_ids = _sds_simple((shape.global_batch,), jnp.int32, mesh, bspec)
+        batch = {"tokens": tokens}
+        if cfg.encoder is not None:
+            batch["frames"] = _sds_simple(
+                (shape.global_batch, cfg.encoder.n_frames, cfg.d_model),
+                jnp.bfloat16, mesh, bspec + P(None, None))
+        fwd_opts = opts
+
+        def prefill_step(params, pool, batch, cache, slot_ids):
+            mode = LoRAMode("batched", slot_ids, scale)
+            logits, cache = model.prefill(params, batch, cache, pool, mode,
+                                          fwd_opts)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        return prefill_step, {"params": params_sds, "pool": pool_sds,
+                              "batch": batch, "cache": cache_sds,
+                              "slot_ids": slot_ids}
+
+    # decode
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cache_sds = _sds(cache_shapes, mesh)
+    tokens = _sds_simple((shape.global_batch,), jnp.int32, mesh, bspec)
+    pos = _sds_simple((shape.global_batch,), jnp.int32, mesh, bspec)
+    slot_ids = _sds_simple((shape.global_batch,), jnp.int32, mesh, bspec)
+
+    def serve_step(params, pool, tokens, cache, pos, slot_ids):
+        mode = LoRAMode("batched", slot_ids, scale)
+        logits, cache = model.decode_step(params, tokens, cache, pos, pool,
+                                          mode)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    return serve_step, {"params": params_sds, "pool": pool_sds,
+                        "tokens": tokens, "cache": cache_sds, "pos": pos,
+                        "slot_ids": slot_ids}
+
+
+def adamw_sds(opt_shapes, mesh):
+    from repro.training.optimizer import AdamWState
+    return AdamWState(
+        jax.ShapeDtypeStruct((), jnp.int32,
+                             sharding=NamedSharding(mesh, P())),
+        _sds(opt_shapes.mu, mesh), _sds(opt_shapes.nu, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+              opts: Optional[Dict] = None, save: bool = True,
+              verbose: bool = True,
+              config_patch: Optional[Dict] = None,
+              rules_patch: Optional[Dict] = None,
+              variant: str = "") -> Dict[str, Any]:
+    """config_patch: dataclasses.replace kwargs applied to the ModelConfig
+    (nested 'attn'/'moe' dicts patch the sub-configs); rules_patch: extra
+    logical-sharding rules (e.g. {'replicate_below': 64e6}). Used by the
+    §Perf hillclimb to lower variants without forking configs."""
+    import dataclasses
+    cfg = get_config(arch)
+    if config_patch:
+        patch = dict(config_patch)
+        for sub in ("attn", "moe", "ssm", "lora"):
+            if sub in patch:
+                cur = getattr(cfg, sub)
+                patch[sub] = dataclasses.replace(cur, **patch[sub])
+        cfg = dataclasses.replace(cfg, **patch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    mesh_name = "x".join(str(s) for s in mesh.shape.values())
+
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_chips": n_chips, "status": "ok",
+    }
+
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        result["status"] = "skipped"
+        result["reason"] = ("full-attention architecture without a "
+                            "sub-quadratic variant (DESIGN.md §4)")
+        if save:
+            _save(result)
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_name}] SKIPPED: "
+                  f"{result['reason']}")
+        return result
+
+    rules = None
+    if rules_patch:
+        from repro.distributed.sharding import LOGICAL_RULES
+        rules = dict(LOGICAL_RULES)
+        rules.update(rules_patch)
+    if variant:
+        result["variant"] = variant
+
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        step_fn, kwargs = input_specs(cfg, shape, mesh, opts)
+        with mesh:
+            lowered = jax.jit(step_fn).lower(**kwargs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            # scan-aware global flops/bytes from the jaxpr (see analysis.py:
+            # HLO cost_analysis counts while bodies once — documented CPU
+            # backend limitation)
+            wte = (opts or {}).get("while_trip_estimate", 1.0)
+            jc = jaxpr_cost(jax.make_jaxpr(step_fn)(**kwargs),
+                            while_trip_estimate=wte, n_chips=n_chips)
+    coll = parse_hlo_collectives(hlo)
+
+    flops = jc["mxu_flops"]                 # global MXU flops
+    hbm_bytes = jc["bytes"]                 # global algorithmic bytes
+    coll_global = {k: v * n_chips for k, v in coll.items()}
+    terms = roofline_terms(flops, hbm_bytes, coll_global["total"], n_chips)
+
+    # analytic per-device argument residency (weights+caches+opt under the
+    # chosen shardings) — the "does it fit" number
+    arg_bytes_dev = _arg_bytes_per_device(kwargs, mesh)
+
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+
+    result.update({
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        },
+        "arg_bytes_per_device": arg_bytes_dev,
+        "flops": flops,
+        "vpu_flops": jc["vpu_flops"],
+        "hbm_bytes": hbm_bytes,
+        "hlo_flops_per_device_raw": float(cost.get("flops", 0.0)),
+        "hlo_bytes_per_device_raw": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll_global,
+        "roofline": terms,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / flops if flops else None,
+        "dominant": max(terms, key=terms.get),
+        "tokens": tokens,
+    })
+    if save:
+        _save(result)
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK "
+              f"compile={t_compile:.1f}s args/dev={arg_bytes_dev/1e9:.2f}GB "
+              f"flops={flops:.3e} bytes={hbm_bytes:.3e} "
+              f"coll={coll_global['total']:.3e} "
+              f"dominant={result['dominant']} "
+              f"useful={result['useful_flops_ratio'] and round(result['useful_flops_ratio'], 3)}")
+    return result
+
+
+def _arg_bytes_per_device(kwargs, mesh) -> float:
+    """Σ leaf bytes / shards(leaf) — exact per-device residency of all
+    step arguments (weights, adapter pool, caches, optimizer state)."""
+    n = 0.0
+    for leaf in jax.tree.leaves(kwargs):
+        sharding = getattr(leaf, "sharding", None)
+        size = float(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        if sharding is not None and hasattr(sharding, "spec"):
+            shards = 1
+            for axis_entry, dim in zip(
+                    tuple(sharding.spec) + (None,) * 10, leaf.shape):
+                if axis_entry is None:
+                    continue
+                axes = (axis_entry,) if isinstance(axis_entry, str) \
+                    else tuple(axis_entry)
+                for a in axes:
+                    shards *= mesh.shape[a]
+            size /= shards
+        n += size
+    return n
+
+
+def _save(result: Dict[str, Any]) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = f"__{result['variant']}" if result.get("variant") else ""
+    name = (f"{result['arch']}__{result['shape']}__{result['mesh']}"
+            f"{suffix}.json")
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(result, f, indent=2)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) combo")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in combos:
+        try:
+            run_combo(arch, shape, multi_pod=args.multi_pod)
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, repr(e)))
+            traceback.print_exc()
+            if not args.continue_on_error:
+                return 1
+    if failures:
+        print(f"{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print("all dry-runs passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 v5e chips. Multi-pod adds a leading
+'pod' axis (2 × 256 = 512 chips); the 'pod' axis carries only
+data-parallel traffic (batch/gradient), matching the weaker inter-pod DCN
+links vs intra-pod ICI.
+
+This module must never touch jax device state at import time — the dry-run
+sets XLA_FLAGS before importing anything, and mesh creation happens inside
+``make_production_mesh`` only.
+"""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float,
+                   collective_bytes: float, n_chips: int) -> dict:
+    return {
+        "compute_s": hlo_flops / (n_chips * PEAK_FLOPS_BF16),
+        "memory_s": hlo_bytes / (n_chips * HBM_BW),
+        "collective_s": collective_bytes / (n_chips * ICI_BW),
+    }

@@ -1,0 +1,58 @@
+"""Training launcher: LoRA fine-tune an adapter (and optionally the
+adapter router head) on the synthetic task pipeline.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --reduced --steps 200 --task 1 --out adapters/task1.npz
+
+On real hardware the same step function jits against
+``make_production_mesh()`` with the param rules in
+``repro.distributed.sharding`` (exactly what the dry-run lowers); on this
+container it runs single-device on a reduced config.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.models import build_model
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import DataConfig, lm_batches
+from repro.training.train import train_loop
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--task", type=int, default=0)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="save adapter .npz here")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = build_model(cfg)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                    batch_size=args.batch_size, seed=args.seed)
+    state, history = train_loop(
+        model, lm_batches(dc, task=args.task), args.steps,
+        rng=jax.random.PRNGKey(args.seed), peak_lr=args.lr, log_every=10)
+    if args.out:
+        save_checkpoint(args.out, state.lora)
+        print(f"adapter saved to {args.out}")
+    print(f"final loss {history[-1][1]:.4f} "
+          f"(start {history[0][1]:.4f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,409 @@
+"""Attention: GQA + RoPE + blockwise (flash-style) prefill + cached decode.
+
+Design notes (TPU adaptation, see DESIGN.md §2):
+
+* Full-sequence attention is computed **blockwise with an online softmax**
+  (pure-JAX flash): an outer scan over query blocks and an inner scan over
+  KV blocks keeps live memory at [block_q × block_kv] per step instead of
+  the O(S²) score matrix — mandatory for the 32k prefill dry-run shape.
+* ``skip_masked_blocks=True`` bounds the inner loop per query block
+  (causal upper bound, sliding-window lower bound) — this is a §Perf
+  hillclimb lever: the baseline scans all KV blocks and masks.
+* Decode reads a ring-buffer cache: local (sliding-window / chunked) layers
+  keep only ``window`` entries, global layers the full context. Validity is
+  tracked by a stored-position array, so masks are uniform across kinds.
+* Layer kinds: 'global' (full causal), 'local' (sliding window; with
+  ``chunked_local`` the Llama-4 same-chunk mask instead of a rolling
+  window).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import LoRAMode
+from repro.distributed.sharding import logical_constraint
+from repro.models.layers import linear, rmsnorm, rmsnorm_init, truncated_normal_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    angles = angles[..., None, :]  # add head dim -> [..., S, 1, hd/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attention_init(rng: jax.Array, cfg: ModelConfig, *, stack: Tuple[int, ...] = (),
+                   dtype) -> Dict:
+    d, qs, kvs = cfg.d_model, cfg.q_size, cfg.kv_size
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": truncated_normal_init(ks[0], (*stack, d, qs), 1.0, dtype),
+        "wk": truncated_normal_init(ks[1], (*stack, d, kvs), 1.0, dtype),
+        "wv": truncated_normal_init(ks[2], (*stack, d, kvs), 1.0, dtype),
+        "wo": truncated_normal_init(ks[3], (*stack, qs, d), 1.0, dtype),
+    }
+    if cfg.attn.qkv_bias:
+        p["bq"] = jnp.zeros((*stack, qs), dtype)
+        p["bk"] = jnp.zeros((*stack, kvs), dtype)
+        p["bv"] = jnp.zeros((*stack, kvs), dtype)
+    if cfg.attn.qk_norm:
+        hd = cfg.resolved_head_dim
+        p["q_norm"] = {"scale": jnp.zeros((*stack, hd), dtype)}
+        p["k_norm"] = {"scale": jnp.zeros((*stack, hd), dtype)}
+    return p
+
+
+def _maybe_qk_norm(p: Dict, q: jax.Array, k: jax.Array, eps: float):
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, eps)
+        k = rmsnorm(p["k_norm"], k, eps)
+    return q, k
+
+
+def project_qkv(params: Dict, x: jax.Array, cfg: ModelConfig,
+                positions: jax.Array,
+                lora: Optional[Dict] = None,
+                lora_mode: LoRAMode = LoRAMode()):
+    """x: [B, S, d] -> q [B,S,H,hd], k,v [B,S,KH,hd] (post-RoPE/qk-norm)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    lget = (lora or {}).get
+
+    def proj(name, w, bias, nheads):
+        pr = {"w": w}
+        if bias is not None:
+            pr["b"] = bias
+        y = linear(pr, x, lget(name), lora_mode)
+        return y.reshape(b, s, nheads, hd)
+
+    q = proj("q", params["wq"], params.get("bq"), cfg.n_heads)
+    k = proj("k", params["wk"], params.get("bk"), cfg.n_kv_heads)
+    v = proj("v", params["wv"], params.get("bv"), cfg.n_kv_heads)
+    q, k = _maybe_qk_norm(params, q, k, cfg.norm_eps)
+    if cfg.attn.rope:
+        q = apply_rope(q, positions, cfg.attn.rope_theta)
+        k = apply_rope(k, positions, cfg.attn.rope_theta)
+    q = logical_constraint(q, "batch", None, "heads", None)
+    k = logical_constraint(k, "batch", None, "kv_heads", None)
+    v = logical_constraint(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+
+def mask_fn(kind: str, cfg: ModelConfig):
+    """(qpos, kpos) -> bool mask. qpos/kpos broadcast against each other."""
+    w = cfg.attn.sliding_window
+    chunked = cfg.attn.chunked_local
+
+    def fn(qpos, kpos):
+        if kind == "bidir":  # encoder self-attention
+            return (kpos >= 0) & jnp.broadcast_to(jnp.bool_(True),
+                                                  jnp.broadcast_shapes(
+                                                      jnp.shape(qpos),
+                                                      jnp.shape(kpos)))
+        valid = (kpos >= 0) & (kpos <= qpos)
+        if kind == "local":
+            if chunked:
+                valid &= (qpos // w) == (kpos // w)
+            else:
+                valid &= (qpos - kpos) < w
+        return valid
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Blockwise full-sequence attention (prefill / training)
+# ---------------------------------------------------------------------------
+
+
+def _fit_block(n: int, requested: int) -> int:
+    """Largest divisor of n that is ≤ requested (handles e.g. the whisper
+    encoder's 1500 frames against a 512 block request)."""
+    b = min(requested, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        qpos: jax.Array, kpos: jax.Array, *,
+                        kind: str, cfg: ModelConfig,
+                        block_q: int = 512, block_kv: int = 1024,
+                        skip_masked_blocks: bool = False) -> jax.Array:
+    """Flash-style attention in pure JAX.
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, KH, hd]; qpos: [Sq]; kpos: [Skv].
+    Returns [B, Sq, H, hd]. Causal/local masking from positions.
+    """
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh  # GQA group size
+    block_q = _fit_block(sq, block_q)
+    block_kv = _fit_block(skv, block_kv)
+    nq, nkv = sq // block_q, skv // block_kv
+    softcap = cfg.attn.attn_logit_softcap
+    scale = hd ** -0.5
+    mfn = mask_fn(kind, cfg)
+
+    # [B, nq, bq, KH, G, hd]
+    qb = q.reshape(b, nq, block_q, kh, g, hd)
+    kb = k.reshape(b, nkv, block_kv, kh, hd)
+    vb = v.reshape(b, nkv, block_kv, kh, hd)
+    qposb = qpos.reshape(nq, block_q)
+    kposb = kpos.reshape(nkv, block_kv)
+
+    def kv_step(carry, j):
+        acc, m, l, qi, qblk, qp = carry
+        kj = jax.lax.dynamic_index_in_dim(kb, j, axis=1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, axis=1, keepdims=False)
+        kp = jax.lax.dynamic_index_in_dim(kposb, j, axis=0, keepdims=False)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kj).astype(jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = mfn(qp[:, None], kp[None, :])  # [bq, bkv]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return (acc, m_new, l, qi, qblk, qp), None
+
+    def q_step(_, qi):
+        qblk = jax.lax.dynamic_index_in_dim(qb, qi, axis=1, keepdims=False)
+        qp = jax.lax.dynamic_index_in_dim(qposb, qi, axis=0, keepdims=False)
+        acc = jnp.zeros((b, kh, g, block_q, hd), jnp.float32)
+        m = jnp.full((b, kh, g, block_q), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, kh, g, block_q), jnp.float32)
+        carry = (acc, m, l, qi, qblk, qp)
+        if skip_masked_blocks and kind != "bidir":
+            # causal upper bound / local lower bound per query block —
+            # dynamic trip count via fori_loop (the §Perf variant).
+            q_hi = qp.max()
+            lo = jnp.int32(0)
+            if kind == "local":
+                q_lo = qp.min()
+                if cfg.attn.chunked_local:
+                    lo_pos = (q_lo // cfg.attn.sliding_window) * cfg.attn.sliding_window
+                else:
+                    lo_pos = jnp.maximum(q_lo - cfg.attn.sliding_window + 1, 0)
+                lo = lo_pos // block_kv
+            hi = jnp.minimum(q_hi // block_kv + 1, nkv).astype(jnp.int32)
+
+            def body(j, c):
+                c2, _ = kv_step(c, j)
+                return c2
+
+            carry = jax.lax.fori_loop(lo, hi, body, carry)
+        else:
+            carry, _ = jax.lax.scan(kv_step, carry,
+                                    jnp.arange(nkv, dtype=jnp.int32))
+        acc, m, l = carry[0], carry[1], carry[2]
+        l = jnp.maximum(l, 1e-30)
+        out = (acc / l[..., None])  # [b, kh, g, bq, hd]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq, dtype=jnp.int32))
+    # outs: [nq, b, kh, g, bq, hd] -> [b, sq, h, hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cached decode attention
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, cache_len: int, n_kv: int, head_dim: int,
+                  dtype, stack: Tuple[int, ...] = (),
+                  quant: bool = False) -> Dict:
+    if quant:
+        return {
+            "k": jnp.zeros((*stack, batch, cache_len, n_kv, head_dim),
+                           jnp.int8),
+            "v": jnp.zeros((*stack, batch, cache_len, n_kv, head_dim),
+                           jnp.int8),
+            "k_scale": jnp.zeros((*stack, batch, cache_len, n_kv),
+                                 jnp.bfloat16),
+            "v_scale": jnp.zeros((*stack, batch, cache_len, n_kv),
+                                 jnp.bfloat16),
+            "pos": jnp.full((*stack, batch, cache_len), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((*stack, batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((*stack, batch, cache_len, n_kv, head_dim), dtype),
+        "pos": jnp.full((*stack, batch, cache_len), -1, jnp.int32),
+    }
+
+
+def _quantize_kv(x: jax.Array):
+    """x: [..., hd] -> (int8 values, per-vector scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(cache: Dict, name: str) -> jax.Array:
+    if f"{name}_scale" in cache:
+        return (cache[name].astype(jnp.float32)
+                * cache[f"{name}_scale"].astype(jnp.float32)[..., None])
+    return cache[name]
+
+
+def cache_update(cache: Dict, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array) -> Dict:
+    """Ring-buffer write of one token per sequence.
+
+    k_new/v_new: [B, 1, KH, hd]; pos: [B] int32 per-slot positions
+    (continuous batching: every slot may be at a different depth)."""
+    b = cache["k"].shape[0]
+    clen = cache["k"].shape[-3]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    idx = pos % clen
+    rows = jnp.arange(b)
+    out = dict(cache)
+    if "k_scale" in cache:  # int8 cache: quantize on write
+        kq, ks = _quantize_kv(k_new[:, 0])
+        vq, vs = _quantize_kv(v_new[:, 0])
+        out["k"] = cache["k"].at[rows, idx].set(kq)
+        out["v"] = cache["v"].at[rows, idx].set(vq)
+        out["k_scale"] = cache["k_scale"].at[rows, idx].set(
+            ks.astype(cache["k_scale"].dtype))
+        out["v_scale"] = cache["v_scale"].at[rows, idx].set(
+            vs.astype(cache["v_scale"].dtype))
+    else:
+        out["k"] = cache["k"].at[rows, idx].set(
+            k_new[:, 0].astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[rows, idx].set(
+            v_new[:, 0].astype(cache["v"].dtype))
+    out["pos"] = cache["pos"].at[rows, idx].set(pos)
+    return out
+
+
+def cache_fill(cache: Dict, k: jax.Array, v: jax.Array,
+               positions: jax.Array) -> Dict:
+    """Bulk ring-buffer write after prefill.
+
+    k, v: [B, S, KH, hd]; positions: [S]. If S exceeds the ring capacity
+    only the last ``clen`` tokens are retained (the older ones would have
+    been overwritten anyway) — consecutive positions map to distinct ring
+    slots so the scatter is collision-free.
+    """
+    clen = cache["k"].shape[-3]
+    s = k.shape[1]
+    if s > clen:
+        k, v, positions = k[:, -clen:], v[:, -clen:], positions[-clen:]
+    idx = positions % clen
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        out["k"] = cache["k"].at[:, idx].set(kq)
+        out["v"] = cache["v"].at[:, idx].set(vq)
+        out["k_scale"] = cache["k_scale"].at[:, idx].set(
+            ks.astype(cache["k_scale"].dtype))
+        out["v_scale"] = cache["v_scale"].at[:, idx].set(
+            vs.astype(cache["v_scale"].dtype))
+    else:
+        out["k"] = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+    out["pos"] = cache["pos"].at[:, idx].set(
+        jnp.broadcast_to(positions.astype(jnp.int32),
+                         (cache["pos"].shape[0], idx.shape[0])))
+    return out
+
+
+def decode_attention(q: jax.Array, cache: Dict, qpos: jax.Array, *,
+                     kind: str, cfg: ModelConfig) -> jax.Array:
+    """Single-token attention over the ring cache.
+
+    q: [B, H, hd]; cache k/v: [B, C, KH, hd]; cache pos: [B, C];
+    qpos: scalar or [B] per-slot positions. Returns [B, H, hd].
+    """
+    b, h, hd = q.shape
+    kh = cache["k"].shape[-2]
+    g = h // kh
+    scale = hd ** -0.5
+    softcap = cfg.attn.attn_logit_softcap
+    mfn = mask_fn(kind, cfg)
+    qg = q.reshape(b, kh, g, hd)
+    k_cache = _dequant(cache, "k").astype(q.dtype)
+    v_cache = _dequant(cache, "v").astype(q.dtype)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = jnp.broadcast_to(jnp.asarray(qpos, jnp.int32), (b,))
+    mask = mfn(qpos[:, None], cache["pos"])  # [B, C]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention(params: Dict, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                    cfg: ModelConfig, lora: Optional[Dict] = None,
+                    lora_mode: LoRAMode = LoRAMode()) -> jax.Array:
+    """x: [B, S, d]; enc_kv: precomputed (k, v) [B, Senc, KH, hd]."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    lget = (lora or {}).get
+    q = linear({"w": params["wq"]}, x, lget("q"), lora_mode)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k, v = enc_kv
+    kh = k.shape[2]
+    g = cfg.n_heads // kh
+    qg = q.reshape(b, s, kh, g, hd)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * hd ** -0.5
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    out = out.reshape(b, s, cfg.q_size)
+    return linear({"w": params["wo"]}, out, lget("o"), lora_mode)
+
+
+def encode_cross_kv(params: Dict, enc_out: jax.Array, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output once per request."""
+    b, t, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = linear({"w": params["wk"]}, enc_out).reshape(b, t, cfg.n_kv_heads, hd)
+    v = linear({"w": params["wv"]}, enc_out).reshape(b, t, cfg.n_kv_heads, hd)
+    return k, v

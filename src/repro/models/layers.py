@@ -1,0 +1,121 @@
+"""Shared neural-net layers: norms, linears (LoRA-aware), MLP blocks.
+
+Everything is functional: params are plain dicts, layers are functions.
+Initializers take an rng and return the param subtree; apply functions take
+(params, x, ...). LoRA enters every linear through ``repro.core.lora``:
+the caller passes the module's (possibly stacked) (A, B) pair plus a
+``LoRAMode`` describing single-adapter vs batched multi-tenant application.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import LoRAMode, apply_lora
+from repro.distributed.sharding import logical_constraint
+
+
+def truncated_normal_init(rng, shape, scale, dtype):
+    stddev = scale / max(1.0, math.sqrt(shape[0] if shape else 1))
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               stack: Tuple[int, ...] = ()) -> Dict[str, jax.Array]:
+    w = truncated_normal_init(rng, (*stack, d_in, d_out), 1.0, dtype)
+    out = {"w": w}
+    if bias:
+        out["b"] = jnp.zeros((*stack, d_out), dtype)
+    return out
+
+
+def linear(params: Dict[str, jax.Array], x: jax.Array,
+           lora_pair: Optional[Dict[str, jax.Array]] = None,
+           lora_mode: LoRAMode = LoRAMode()) -> jax.Array:
+    """y = x W (+ b) + LoRA delta. The batch-LoRA add is the paper's
+    ``y_i = W x_i + B_{a_i} A_{a_i} x_i`` (Fig. 6) — the base GEMM always
+    runs over the full heterogeneous batch."""
+    y = jnp.einsum("...d,do->...o", x, params["w"].astype(x.dtype))
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    delta = apply_lora(x, lora_pair, lora_mode)
+    return y + delta
+
+
+def rmsnorm_init(d: int, dtype) -> Dict[str, jax.Array]:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1+scale)
+
+
+def rmsnorm(params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated or plain)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(rng, d_model: int, d_ff: int, *, glu: bool, dtype,
+             stack: Tuple[int, ...] = ()) -> Dict:
+    ks = jax.random.split(rng, 3)
+    p = {
+        "up": truncated_normal_init(ks[0], (*stack, d_model, d_ff), 1.0, dtype),
+        "down": truncated_normal_init(ks[1], (*stack, d_ff, d_model), 1.0, dtype),
+    }
+    if glu:
+        p["gate"] = truncated_normal_init(ks[2], (*stack, d_model, d_ff), 1.0, dtype)
+    return p
+
+
+def mlp(params: Dict, x: jax.Array, *, act: str, glu: bool,
+        lora: Optional[Dict] = None,
+        lora_mode: LoRAMode = LoRAMode()) -> jax.Array:
+    fn = activation(act)
+    lget = (lora or {}).get
+    up = linear({"w": params["up"]}, x, lget("up"), lora_mode)
+    if glu:
+        gate = linear({"w": params["gate"]}, x, lget("gate"), lora_mode)
+        h = fn(gate) * up
+    else:
+        h = fn(up)
+    h = logical_constraint(h, "batch", None, "ff")
+    return linear({"w": params["down"]}, h, lget("down"), lora_mode)
+
+
+def unembed(x: jax.Array, embed_or_head: jax.Array, *, tied: bool,
+            softcap: Optional[float]) -> jax.Array:
+    """Final logits with optional soft-capping (gemma2)."""
+    if tied:
+        logits = jnp.einsum("...d,vd->...v", x, embed_or_head.astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, embed_or_head.astype(x.dtype))
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logical_constraint(logits, "batch", None, "vocab")

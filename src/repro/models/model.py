@@ -1,0 +1,202 @@
+"""Unified model API: build_model(cfg) → Model with init/forward/
+prefill/decode_step, across all six architecture families.
+
+The Model is the substrate the paper's serving system runs on: the serving
+engine calls ``prefill`` and ``decode_step`` with a ``LoRAMode`` carrying
+per-request adapter slot ids (Batch LoRA Inference), the training substrate
+calls ``forward`` with a single-adapter mode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import LoRAMode
+from repro.distributed.sharding import logical_constraint
+from repro.models import encdec, transformer
+from repro.models.layers import rmsnorm, truncated_normal_init, unembed
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[cfg.dtype]
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = _dtype(cfg)
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def init(self, rng: jax.Array) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 4)
+        params: Dict[str, Any] = {
+            "embed": truncated_normal_init(ks[0], (cfg.vocab_size, cfg.d_model),
+                                           1.0, self.dtype),
+            "final_norm": {"scale": jnp.zeros((cfg.d_model,), self.dtype)},
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = truncated_normal_init(
+                ks[1], (cfg.d_model, cfg.vocab_size), 1.0, self.dtype)
+        if cfg.encoder is not None:
+            params["encoder"] = encdec.init_encoder(ks[2], cfg, self.dtype)
+            params["decoder"] = encdec.init_decoder(ks[3], cfg, self.dtype)
+        else:
+            params.update(transformer.init_stack(ks[2], cfg, self.dtype))
+        return params
+
+    def init_lora(self, rng: jax.Array, n_slots: Optional[int] = None,
+                  dtype=jnp.float32) -> Dict:
+        if self.cfg.encoder is not None:
+            return encdec.init_encdec_lora(rng, self.cfg, n_slots=n_slots,
+                                           dtype=dtype)
+        return transformer.init_lora_stack(rng, self.cfg, n_slots=n_slots,
+                                           dtype=dtype)
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+
+    def embed(self, params: Dict, tokens: jax.Array) -> jax.Array:
+        x = params["embed"][tokens]
+        if self.cfg.scale_embeddings:
+            x = x * jnp.asarray(math.sqrt(self.cfg.d_model), x.dtype)
+        axes = ("batch",) + (None,) * (x.ndim - 1)
+        return logical_constraint(x, *axes)
+
+    def logits(self, params: Dict, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        return unembed(h, head, tied=cfg.tie_embeddings,
+                       softcap=cfg.final_logit_softcap)
+
+    # ------------------------------------------------------------------
+    # full-sequence forward (training / scoring)
+    # ------------------------------------------------------------------
+
+    def forward(self, params: Dict, batch: Dict[str, jax.Array],
+                lora: Optional[Dict] = None,
+                lora_mode: LoRAMode = LoRAMode(),
+                opts: Optional[Dict] = None,
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """batch: {'tokens': [B, S]} (+ 'frames': [B, T, d] for enc-dec).
+        Returns (logits [B, S, V], aux losses)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self.embed(params, tokens)
+        if cfg.encoder is not None:
+            enc_out = encdec.encode(params["encoder"], batch["frames"], cfg,
+                                    lora, lora_mode, opts)
+            h = encdec.decode_full(params["decoder"], x, enc_out, cfg, lora,
+                                   lora_mode, opts)
+            aux: Dict[str, jax.Array] = {}
+        else:
+            positions = jnp.arange(tokens.shape[1])
+            h, aux = transformer.forward_stack(params, x, cfg, positions,
+                                               lora, lora_mode, opts)
+        return self.logits(params, h), aux
+
+    # ------------------------------------------------------------------
+    # serving: cache, prefill, decode
+    # ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int,
+                   enc_frames: Optional[int] = None) -> Dict:
+        cfg = self.cfg
+        if cfg.encoder is not None:
+            return encdec.init_decoder_cache(
+                cfg, batch, max_len, enc_frames or cfg.encoder.n_frames,
+                self.dtype)
+        return transformer.init_cache(cfg, batch, max_len, self.dtype)
+
+    def prefill(self, params: Dict, batch: Dict[str, jax.Array], cache: Dict,
+                lora: Optional[Dict] = None,
+                lora_mode: LoRAMode = LoRAMode(),
+                opts: Optional[Dict] = None,
+                lengths: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+        """Process the prompt, fill the cache. Returns (last-token logits
+        [B, V], cache).
+
+        ``lengths`` [B]: real prompt lengths for right-padded buckets —
+        logits come from position length-1 and cache entries past the real
+        prompt are invalidated (the serving engine's bucketed prefill).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self.embed(params, tokens)
+        seq_mask = None
+        if lengths is not None:
+            seq_mask = jnp.arange(s)[None, :] < lengths[:, None]
+        if cfg.encoder is not None:
+            enc_out = encdec.encode(params["encoder"], batch["frames"], cfg,
+                                    lora, lora_mode, opts)
+            cache = encdec.fill_cross_cache(params["decoder"], enc_out, cfg,
+                                            cache)
+            h, new_self = encdec.decode_full(params["decoder"], x, enc_out,
+                                             cfg, lora, lora_mode, opts,
+                                             self_cache=cache["self"])
+            cache = dict(cache, self=new_self)
+        else:
+            positions = jnp.arange(s)
+            h, _, cache = transformer.forward_stack(
+                params, x, cfg, positions, lora, lora_mode, opts, cache=cache,
+                seq_mask=seq_mask, lengths=lengths)
+        if lengths is not None:
+            last = h[jnp.arange(b), lengths - 1]
+            cache = _invalidate_past(cache, lengths)
+        else:
+            last = h[:, -1]
+        return self.logits(params, last), cache
+
+    def decode_step(self, params: Dict, tokens: jax.Array, cache: Dict,
+                    pos: jax.Array, lora: Optional[Dict] = None,
+                    lora_mode: LoRAMode = LoRAMode(),
+                    ) -> Tuple[jax.Array, Dict]:
+        """tokens: [B] int32 (the last generated token per sequence);
+        pos: scalar or [B] int32 per-slot positions (continuous batching).
+        Returns (logits [B, V], cache)."""
+        cfg = self.cfg
+        x = self.embed(params, tokens)  # [B, d]
+        if cfg.encoder is not None:
+            h, cache = encdec.decode_step(params["decoder"], x, cache, cfg,
+                                          pos, lora, lora_mode)
+        else:
+            h, cache = transformer.decode_stack(params, x, cache, cfg, pos,
+                                                lora, lora_mode)
+        return self.logits(params, h), cache
+
+
+def _invalidate_past(cache: Dict, lengths: jax.Array) -> Dict:
+    """Set stored cache positions ≥ length (right-pad writes) to -1.
+
+    Attention caches are dicts with a 'pos' leaf of shape [..., B, C]
+    (group/layer stack dims leading); SSM caches have no 'pos' and were
+    already masked via dt=0.
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            if "pos" in node and "k" in node:
+                pos = node["pos"]
+                # broadcast lengths over leading stack dims and trailing C
+                shape = [1] * pos.ndim
+                shape[-2] = lengths.shape[0]
+                lb = lengths.reshape(shape)
+                return dict(node, pos=jnp.where(pos < lb, pos, -1))
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(cache)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

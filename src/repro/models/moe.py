@@ -1,0 +1,167 @@
+"""Mixture-of-Experts block with expert-parallel, capacity-based dispatch.
+
+Dispatch uses a scatter/gather formulation rather than the classic
+[T, E, C] one-hot einsum: with llama4-scale dims (T ≈ 1M tokens, E = 128)
+the dense dispatch tensor is ~10^12 elements — a scatter into the [E, C, d]
+expert buffer keeps memory at O(T·d + E·C·d). Experts are stacked on a
+leading dim sharded over the 'expert' logical axis (model axis), so the
+scatter/gather lower to all-to-alls under GSPMD — the TPU analog of the
+paper's u-batch gather/scatter, applied at the expert level.
+
+Returns aux losses (load-balance + router z-loss) for the training
+substrate.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.lora import LoRAMode
+from repro.distributed.sharding import logical_constraint
+from repro.models.layers import activation, mlp, mlp_init, truncated_normal_init
+
+
+def moe_init(rng: jax.Array, cfg: ModelConfig, *, stack: Tuple[int, ...] = (),
+             dtype) -> Dict:
+    m = cfg.moe
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {
+        "router": truncated_normal_init(ks[0], (*stack, d, m.n_experts), 1.0,
+                                        jnp.float32),
+        "experts": mlp_init(ks[1], d, f, glu=cfg.glu, dtype=dtype,
+                            stack=(*stack, m.n_experts)),
+    }
+    if m.shared_expert:
+        p["shared"] = mlp_init(ks[2], d, f, glu=cfg.glu, dtype=dtype,
+                               stack=stack)
+    return p
+
+
+def _expert_ffn(experts: Dict, x: jax.Array, *, act: str, glu: bool) -> jax.Array:
+    """x: [E, C, d] -> [E, C, d] through per-expert gated MLP.
+
+    The buffer's d-dim is constrained onto the fsdp axis so the
+    contraction against the 2D-sharded expert weights stays local
+    (partial-sum + small psum) instead of all-gathering the weights —
+    the dominant collective in MoE decode before this constraint
+    (EXPERIMENTS.md §Perf)."""
+    fn = activation(act)
+    x = logical_constraint(x, "expert", None, "fsdp")
+    up = jnp.einsum("ecd,edf->ecf", x, experts["up"].astype(x.dtype))
+    if glu:
+        gate = jnp.einsum("ecd,edf->ecf", x, experts["gate"].astype(x.dtype))
+        h = fn(gate) * up
+    else:
+        h = fn(up)
+    h = logical_constraint(h, "expert", None, "ff")
+    return jnp.einsum("ecf,efd->ecd", h, experts["down"].astype(x.dtype))
+
+
+def moe_block(params: Dict, x: jax.Array, cfg: ModelConfig,
+              lora: Optional[Dict] = None,
+              lora_mode: LoRAMode = LoRAMode(),
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, S, d] -> ([B, S, d], aux_losses).
+
+    Top-k routing with capacity C = ceil(T·k·cf / E); over-capacity tokens
+    drop to the shared expert (if any) or pass through via the residual.
+    """
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = m.top_k
+    e = m.n_experts
+    cap = int(max(1, (t * k * m.capacity_factor) / e))
+    # round capacity to an MXU-friendly multiple
+    cap = -(-cap // 128) * 128 if cap >= 128 else cap
+    # small batches (decode steps): use the lossless capacity t·k so no
+    # token ever drops — at decode scale the [E, t·k, d] buffer is cheap
+    # and routing imbalance would otherwise drop most of a decode batch.
+    if t * k <= 4096:
+        cap = t * k
+
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, k)  # [t, k]
+    if k > 1:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch-style) ----
+    me = probs.mean(axis=0)                                   # [e]
+    ce = jnp.mean(jax.nn.one_hot(eids[:, 0], e), axis=0)      # fraction routed
+    load_balance = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"load_balance": load_balance * m.load_balance_loss,
+           "router_z": z_loss * m.router_z_loss}
+
+    # ---- decode-scale one-hot dispatch path (§Perf) ----
+    # The scatter/gather dispatch below forces GSPMD to replicate the
+    # [E, C, d] buffer (hundreds of MB of collectives per layer), and a
+    # per-token weight gather would all-gather the expert weights
+    # themselves (measured: 35× worse — see EXPERIMENTS.md §Perf).
+    # For small token counts a dense one-hot dispatch keeps expert weights
+    # stationary: tokens are replicated (tiny), each chip dispatches into
+    # its LOCAL expert shard, and only the [T, d] combine all-reduces.
+    # Capacity is a tight 2× the balanced load instead of the lossless
+    # t·k, cutting the E×C GEMM-row waste.
+    if 0 < t * k <= m.gather_threshold:
+        cap_d = max(8, -(-2 * t * k // e))
+        flat_eids = eids.reshape(t * k)
+        onehot_e = jax.nn.one_hot(flat_eids, e, dtype=jnp.int32)
+        pos_in_expert = jnp.cumsum(onehot_e, axis=0) - onehot_e
+        pos = jnp.take_along_axis(pos_in_expert, flat_eids[:, None],
+                                  axis=1)[:, 0]
+        keep = pos < cap_d
+        x_rep = jnp.repeat(xf, k, axis=0)
+        disp = jnp.einsum("te,tc->tec", onehot_e.astype(x.dtype),
+                          jax.nn.one_hot(pos, cap_d, dtype=x.dtype)
+                          * keep[:, None].astype(x.dtype))
+        buf = jnp.einsum("tec,td->ecd", disp, x_rep)
+        buf = logical_constraint(buf, "expert", None, None)
+        hout = _expert_ffn(params["experts"], buf, act=cfg.act, glu=cfg.glu)
+        gates = gate_vals.reshape(t * k).astype(x.dtype)
+        y = jnp.einsum("tec,ecd->td", disp * gates[:, None, None], hout)
+        y = (y.reshape(t, k, d).sum(1) if k > 1
+             else y.reshape(t, d)).astype(x.dtype)
+        if "shared" in params:
+            y = y + mlp(params["shared"], xf, act=cfg.act, glu=cfg.glu,
+                        lora=lora, lora_mode=lora_mode)
+        y = y.reshape(b, s, d)
+        return logical_constraint(y, "batch", None, None), aux
+
+    # ---- dispatch: position of each (token, choice) in its expert queue ----
+    flat_eids = eids.reshape(t * k)
+    onehot = jax.nn.one_hot(flat_eids, e, dtype=jnp.int32)    # [t*k, e]
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)     # [t*k, e]
+    pos = jnp.take_along_axis(pos_in_expert, flat_eids[:, None], axis=1)[:, 0]
+    keep = pos < cap
+
+    x_rep = jnp.repeat(xf, k, axis=0)                          # [t*k, d]
+    # (expert, pos) pairs are unique (pos = within-expert rank), so this is
+    # a collision-free scatter-SET — exact, no accumulation-order noise;
+    # over-capacity tokens are pushed out of bounds and dropped.
+    oob_pos = jnp.where(keep, pos, cap)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_eids, oob_pos].set(x_rep, mode="drop")
+    buf = logical_constraint(buf, "expert", None, None)
+    safe_pos = jnp.where(keep, pos, 0)
+
+    hout = _expert_ffn(params["experts"], buf, act=cfg.act, glu=cfg.glu)
+
+    out_tok = hout[flat_eids, safe_pos]                        # [t*k, d]
+    out_tok = jnp.where(keep[:, None], out_tok, 0)
+    gates = gate_vals.reshape(t * k)
+    y = (out_tok * gates[:, None].astype(out_tok.dtype)).reshape(t, k, d).sum(1)
+
+    if "shared" in params:
+        y = y + mlp(params["shared"], xf, act=cfg.act, glu=cfg.glu,
+                    lora=lora, lora_mode=lora_mode)
+    y = y.reshape(b, s, d)
+    return logical_constraint(y, "batch", None, None), aux

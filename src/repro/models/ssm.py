@@ -1,0 +1,257 @@
+"""Mamba-2 (SSD, state-space duality) block [arXiv:2405.21060].
+
+Implements the *chunked dual form* for training/prefill — intra-chunk
+quadratic attention-like term + inter-chunk recurrent state passing via
+``lax.scan`` over chunks (the blocked algorithm of the SSD paper, §6) —
+and the O(1) recurrent step for decode. The recurrent state replaces the
+KV cache: its size is independent of sequence length, which is what makes
+``long_500k`` trivially servable for SSM/hybrid architectures.
+
+Sharding: SSD heads ride the 'ssm_heads'/'ssm_inner' logical axes (model
+axis); the inter-chunk scan carries [B, H, P, N] states, so the recurrence
+is embarrassingly parallel across the model axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core.lora import LoRAMode
+from repro.distributed.sharding import logical_constraint
+from repro.models.layers import linear, rmsnorm, truncated_normal_init
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    return s, d, di, h, s.n_groups, s.d_state, s.head_dim
+
+
+def ssm_init(rng: jax.Array, cfg: ModelConfig, *, stack: Tuple[int, ...] = (),
+             dtype) -> Dict:
+    s, d, di, h, g, n, p = _dims(cfg)
+    conv_ch = di + 2 * g * n
+    in_dim = 2 * di + 2 * g * n + h  # z, xBC, dt
+    ks = jax.random.split(rng, 4)
+    lo, hi = s.a_init_range
+    a_init = jnp.log(jnp.linspace(lo, hi, h, dtype=jnp.float32))
+    a_init = jnp.broadcast_to(a_init, (*stack, h))
+    return {
+        "in_proj": truncated_normal_init(ks[0], (*stack, d, in_dim), 1.0, dtype),
+        "out_proj": truncated_normal_init(ks[1], (*stack, di, d), 1.0, dtype),
+        "conv_w": truncated_normal_init(ks[2], (*stack, s.d_conv, conv_ch), 1.0, dtype),
+        "conv_b": jnp.zeros((*stack, conv_ch), dtype),
+        "dt_bias": jnp.zeros((*stack, h), jnp.float32),
+        "A_log": a_init,
+        "D": jnp.ones((*stack, h), jnp.float32),
+        "gate_norm": {"scale": jnp.zeros((*stack, di), dtype)},
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s, d, di, h, g, n, p = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv_full(xbc: jax.Array, conv_w: jax.Array, conv_b: jax.Array):
+    """Depthwise causal conv over the sequence. xbc: [B, S, C]."""
+    d_conv = conv_w.shape[0]
+    pads = jnp.pad(xbc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(d_conv):  # d_conv is 4: unrolled adds beat conv_general
+        out = out + pads[:, i:i + xbc.shape[1], :] * conv_w[i]
+    return jax.nn.silu(out + conv_b)
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """[..., L] -> [..., L, L] lower-triangular pairwise cumulative sums:
+    out[i, j] = sum_{k in (j, i]} x[k], -inf above the diagonal."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b_mat: jax.Array,
+                c_mat: jax.Array, *, chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD blocked algorithm.
+
+    x: [B, S, H, P]; dt: [B, S, H] (post-softplus); a: [H] (negative);
+    b_mat, c_mat: [B, S, G, N]. Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # expand groups to heads
+    bm = jnp.repeat(b_mat, rep, axis=2)  # [B, S, H, N]
+    cm = jnp.repeat(c_mat, rep, axis=2)
+
+    # chunked views
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = bm.reshape(bsz, nc, chunk, h, n)
+    cc = cm.reshape(bsz, nc, chunk, h, n)
+
+    da = dtc * a  # [B, nc, L, H]  (a < 0)
+    da_cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative
+
+    # ---- intra-chunk (diagonal blocks): quadratic attention-like term ----
+    decay = jnp.exp(segsum(da.transpose(0, 1, 3, 2)))  # [B, nc, H, L, L]
+    cb = jnp.einsum("bclhn,bcshn->bchls", cc, bc)       # [B, nc, H, L, S]
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp",
+                        cb, decay.astype(cb.dtype),
+                        (xc * dtc[..., None]).astype(cb.dtype))
+
+    # ---- chunk-final states ----
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # [B, nc, L, H]
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn",
+                        bc, (dtc * decay_to_end).astype(bc.dtype), xc)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])  # [B, nc, H]
+
+    def step(prev, inp):
+        st, dec = inp  # [B, H, P, N], [B, H]
+        new = prev * dec[..., None, None].astype(prev.dtype) + st
+        return new, prev  # emit the state *entering* this chunk
+
+    init = (jnp.zeros((bsz, h, p, n), y_diag.dtype) if initial_state is None
+            else initial_state.astype(y_diag.dtype))
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B, nc, H, P, N]
+
+    # ---- off-diagonal contribution from the entering state ----
+    state_decay = jnp.exp(da_cum)  # [B, nc, L, H]
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       cc, prev_states, state_decay.astype(cc.dtype))
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final
+
+
+def ssm_block_full(params: Dict, x: jax.Array, cfg: ModelConfig,
+                   lora: Optional[Dict] = None,
+                   lora_mode: LoRAMode = LoRAMode(),
+                   initial_state: Optional[jax.Array] = None,
+                   return_state: bool = False,
+                   seq_mask: Optional[jax.Array] = None,
+                   lengths: Optional[jax.Array] = None):
+    """Full-sequence Mamba-2 block. x: [B, S, d_model] -> same shape.
+
+    seq_mask [B, S] (True = real token) zeroes dt at right-padding so the
+    recurrent state ignores pad steps; ``lengths`` [B] additionally makes
+    the returned conv-tail state exact (gathered at the last real tokens).
+    """
+    s, d, di, h, g, n, p = _dims(cfg)
+    lget = (lora or {}).get
+    zxbcdt = linear({"w": params["in_proj"]}, x, lget("in_proj"), lora_mode)
+    z, xbc_raw, dt = _split_in_proj(cfg, zxbcdt)
+    if lengths is not None:
+        # conv tail = xBC at positions [len-(d_conv-1), len) per sequence
+        offs = jnp.arange(s.d_conv - 1) - (s.d_conv - 1)
+        idx = jnp.clip(lengths[:, None] + offs[None, :], 0,
+                       x.shape[1] - 1)  # [B, d_conv-1]
+        conv_tail = jnp.take_along_axis(xbc_raw, idx[..., None], axis=1)
+    else:
+        conv_tail = xbc_raw[:, -(s.d_conv - 1):, :]  # decode conv seam state
+    xbc = _causal_conv_full(xbc_raw, params["conv_w"].astype(x.dtype),
+                            params["conv_b"].astype(x.dtype))
+    x_in, b_mat, c_mat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    bsz, sl, _ = x.shape
+    x_heads = x_in.reshape(bsz, sl, h, p)
+    x_heads = logical_constraint(x_heads, "batch", None, "ssm_heads", None)
+    b_mat = b_mat.reshape(bsz, sl, g, n)
+    c_mat = c_mat.reshape(bsz, sl, g, n)
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32)
+                           + params["dt_bias"].astype(jnp.float32))
+    if seq_mask is not None:
+        dt_f = jnp.where(seq_mask[..., None], dt_f, 0.0)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    # pad to a chunk multiple; padded steps get dt=0 (identity transition,
+    # zero input) so neither y at real positions nor the final state change.
+    chunk = min(s.chunk_size, sl)
+    pad = (-sl) % chunk
+    if pad:
+        x_heads = jnp.pad(x_heads, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_f = jnp.pad(dt_f, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, state = ssd_chunked(x_heads.astype(jnp.float32), dt_f, a,
+                           b_mat.astype(jnp.float32),
+                           c_mat.astype(jnp.float32),
+                           chunk=chunk,
+                           initial_state=initial_state)
+    if pad:
+        y = y[:, :sl]
+        x_heads = x_heads[:, :sl]
+    y = y + x_heads.astype(jnp.float32) * params["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(bsz, sl, di).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = linear({"w": params["out_proj"]}, y, lget("out_proj"), lora_mode)
+    if return_state:
+        return out, state, conv_tail
+    return out
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype,
+                   stack: Tuple[int, ...] = ()) -> Dict:
+    s, d, di, h, g, n, p = _dims(cfg)
+    conv_ch = di + 2 * g * n
+    return {
+        "conv": jnp.zeros((*stack, batch, s.d_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((*stack, batch, h, p, n), jnp.float32),
+    }
+
+
+def ssm_block_decode(params: Dict, x: jax.Array, cache: Dict,
+                     cfg: ModelConfig, lora: Optional[Dict] = None,
+                     lora_mode: LoRAMode = LoRAMode()):
+    """One-token recurrent step. x: [B, d_model] -> ([B, d_model], cache)."""
+    s, d, di, h, g, n, p = _dims(cfg)
+    lget = (lora or {}).get
+    zxbcdt = linear({"w": params["in_proj"]}, x[:, None, :],
+                    lget("in_proj"), lora_mode)[:, 0]
+    z, xbc, dt = _split_in_proj(cfg, zxbcdt)
+
+    # conv ring: window = concat(conv_state, xbc)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype),
+                              xbc[:, None, :]], axis=1)  # [B, d_conv, C]
+    conv_w = params["conv_w"].astype(x.dtype)
+    xbc_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, conv_w)
+        + params["conv_b"].astype(x.dtype))
+    new_conv = window[:, 1:, :]
+
+    x_in, b_mat, c_mat = jnp.split(xbc_out, [di, di + g * n], axis=-1)
+    bsz = x.shape[0]
+    xh = x_in.reshape(bsz, h, p).astype(jnp.float32)
+    bm = jnp.repeat(b_mat.reshape(bsz, g, n), h // g, axis=1).astype(jnp.float32)
+    cm = jnp.repeat(c_mat.reshape(bsz, g, n), h // g, axis=1).astype(jnp.float32)
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32)
+                           + params["dt_bias"].astype(jnp.float32))  # [B, H]
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt_f * a)  # [B, H]
+    # state update: S = S·exp(dtA) + dt·x ⊗ B
+    state = (cache["state"] * da[..., None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt_f, xh, bm))
+    y = jnp.einsum("bhpn,bhn->bhp", state, cm)
+    y = y + xh * params["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(bsz, di).astype(x.dtype)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = linear({"w": params["out_proj"]}, y[:, None, :],
+                 lget("out_proj"), lora_mode)[:, 0]
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "state": state}

@@ -1,0 +1,508 @@
+"""Decoder stacks: dense / MoE / SSM / hybrid, scanned over layer groups.
+
+Layers are organized into **groups** of ``period`` pattern slots so that
+``jax.lax.scan`` can run over homogeneous stacked params even when layer
+kinds alternate (gemma2 local/global pairs, llama4 3-local+1-global with
+interleaved MoE, zamba2 6-mamba+shared-attention). Within a group, slots
+are unrolled (period ≤ 6, static); across groups everything is scanned, so
+HLO size — and therefore dry-run compile time — is independent of depth.
+
+Param layout::
+
+    params['layers']['slot{p}'][module_leaf]   # leading dim = n_groups
+    params['shared_attn'] / ['shared_mlp']     # zamba2 weight-tied block
+
+LoRA params mirror the same layout under a separate tree (frozen base /
+trainable adapters separation falls out for free).
+
+Caches use the same slot layout; attention slots carry ring-buffer KV
+(window-sized for local layers), SSM slots carry (conv, state).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import LoRAMode, init_lora_pair
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Stack topology
+# ---------------------------------------------------------------------------
+
+
+def stack_period(cfg: ModelConfig) -> int:
+    if cfg.family in ("ssm",):
+        return 1
+    if cfg.shared_attn_every:
+        return cfg.shared_attn_every
+    p = len(cfg.attn.layer_pattern)
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.moe_layer_period)
+    return p
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    period = stack_period(cfg)
+    assert cfg.n_layers % period == 0, (cfg.name, cfg.n_layers, period)
+    return cfg.n_layers // period
+
+
+def slot_kind(cfg: ModelConfig, p: int) -> str:
+    """Mixer kind for pattern slot p: 'ssm' | 'global' | 'local'."""
+    if cfg.family == "ssm" or cfg.shared_attn_every:
+        return "ssm"
+    return cfg.attn.layer_pattern[p % len(cfg.attn.layer_pattern)]
+
+
+def slot_is_moe(cfg: ModelConfig, p: int) -> bool:
+    if cfg.moe is None:
+        return False
+    per = cfg.moe.moe_layer_period
+    return p % per == per - 1
+
+
+def cache_len_for(kind: str, cfg: ModelConfig, max_len: int) -> int:
+    if kind == "local":
+        return min(cfg.attn.sliding_window, max_len)
+    return max_len
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_slot(rng: jax.Array, cfg: ModelConfig, p: int, ng: int, dtype) -> Dict:
+    kind = slot_kind(cfg, p)
+    ks = jax.random.split(rng, 4)
+    d = cfg.d_model
+    out: Dict[str, Any] = {"ln1": {"scale": jnp.zeros((ng, d), dtype)}}
+    if kind == "ssm":
+        out["ssm"] = ssm_lib.ssm_init(ks[0], cfg, stack=(ng,), dtype=dtype)
+        if cfg.d_ff:  # hybrid archs may attach an MLP; pure mamba2 has none
+            out["ln2"] = {"scale": jnp.zeros((ng, d), dtype)}
+            out["mlp"] = mlp_init(ks[1], d, cfg.d_ff, glu=cfg.glu,
+                                  dtype=dtype, stack=(ng,))
+        return out
+    out["attn"] = attn_lib.attention_init(ks[0], cfg, stack=(ng,), dtype=dtype)
+    out["ln2"] = {"scale": jnp.zeros((ng, d), dtype)}
+    if slot_is_moe(cfg, p):
+        out["moe"] = moe_lib.moe_init(ks[1], cfg, stack=(ng,), dtype=dtype)
+    else:
+        out["mlp"] = mlp_init(ks[1], d, cfg.d_ff, glu=cfg.glu, dtype=dtype,
+                              stack=(ng,))
+    if cfg.post_norm:
+        out["post1"] = {"scale": jnp.zeros((ng, d), dtype)}
+        out["post2"] = {"scale": jnp.zeros((ng, d), dtype)}
+    return out
+
+
+def init_stack(rng: jax.Array, cfg: ModelConfig, dtype) -> Dict:
+    period = stack_period(cfg)
+    ng = n_groups(cfg)
+    ks = jax.random.split(rng, period + 2)
+    layers = {f"slot{p}": init_slot(ks[p], cfg, p, ng, dtype)
+              for p in range(period)}
+    params: Dict[str, Any] = {"layers": layers}
+    if cfg.shared_attn_every:
+        # zamba2 weight-tied attention+MLP block (single copy)
+        params["shared_attn"] = {
+            "ln1": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+            "attn": attn_lib.attention_init(ks[-1], cfg, dtype=dtype),
+            "ln2": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+            "mlp": mlp_init(ks[-2], cfg.d_model, cfg.d_ff, glu=cfg.glu,
+                            dtype=dtype),
+        }
+    return params
+
+
+_LORA_DIMS = {
+    "q": lambda c: (c.d_model, c.q_size),
+    "k": lambda c: (c.d_model, c.kv_size),
+    "v": lambda c: (c.d_model, c.kv_size),
+    "o": lambda c: (c.q_size, c.d_model),
+    "up": lambda c: (c.d_model, c.d_ff),
+    "gate": lambda c: (c.d_model, c.d_ff),
+    "down": lambda c: (c.d_ff, c.d_model),
+    "in_proj": lambda c: (c.d_model,
+                          2 * c.ssm.d_inner(c.d_model)
+                          + 2 * c.ssm.n_groups * c.ssm.d_state
+                          + c.ssm.n_heads(c.d_model)) if c.ssm else None,
+    "out_proj": lambda c: (c.ssm.d_inner(c.d_model), c.d_model) if c.ssm else None,
+}
+
+_ATTN_MODULES = ("q", "k", "v", "o")
+_MLP_MODULES = ("up", "gate", "down")
+_SSM_MODULES = ("in_proj", "out_proj")
+
+
+def init_lora_stack(rng: jax.Array, cfg: ModelConfig, *,
+                    n_slots: Optional[int] = None, dtype=jnp.float32) -> Dict:
+    """LoRA tree mirroring the stack. n_slots=None -> single adapter
+    (training); n_slots=R -> stacked pool (multi-tenant serving)."""
+    period = stack_period(cfg)
+    ng = n_groups(cfg)
+    pool = () if n_slots is None else (n_slots,)
+    rank = cfg.lora.rank
+    targets = set(cfg.lora.target_modules)
+    tree: Dict[str, Any] = {"layers": {}}
+    key = rng
+
+    def fresh():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    for p in range(period):
+        kind = slot_kind(cfg, p)
+        slot: Dict[str, Any] = {}
+        mods: Tuple[str, ...]
+        if kind == "ssm":
+            mods = tuple(m for m in _SSM_MODULES if m in targets)
+            if cfg.d_ff and cfg.family == "hybrid":
+                pass  # zamba2 MLP lives in the shared block
+        else:
+            mods = tuple(m for m in _ATTN_MODULES if m in targets)
+            if not slot_is_moe(cfg, p) or cfg.moe is None or (
+                    cfg.moe and cfg.moe.shared_expert):
+                mods = mods + tuple(m for m in _MLP_MODULES
+                                    if m in targets and cfg.d_ff
+                                    and (cfg.glu or m != "gate"))
+        for m in mods:
+            dims = _LORA_DIMS[m](cfg)
+            if dims is None:
+                continue
+            slot[m] = init_lora_pair(fresh(), dims[0], dims[1], rank,
+                                     stack=(ng, *pool), dtype=dtype)
+        tree["layers"][f"slot{p}"] = slot
+    if cfg.shared_attn_every:
+        shared = {}
+        for m in _ATTN_MODULES:
+            if m in targets:
+                dims = _LORA_DIMS[m](cfg)
+                shared[m] = init_lora_pair(fresh(), dims[0], dims[1], rank,
+                                           stack=pool, dtype=dtype)
+        tree["shared_attn"] = shared
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_full(slot_p: Dict, lora_p: Optional[Dict], x: jax.Array,
+                     cfg: ModelConfig, kind: str, positions: jax.Array,
+                     lora_mode: LoRAMode, opts: Dict,
+                     cache_slot: Optional[Dict] = None):
+    h = rmsnorm(slot_p["ln1"], x, cfg.norm_eps)
+    q, k, v = attn_lib.project_qkv(slot_p["attn"], h, cfg, positions,
+                                   lora_p, lora_mode)
+    if cache_slot is not None:
+        cache_slot = attn_lib.cache_fill(cache_slot, k, v, positions)
+    o = attn_lib.blockwise_attention(
+        q, k, v, positions, positions, kind=kind, cfg=cfg,
+        block_q=opts.get("block_q", 512),
+        block_kv=opts.get("block_kv", 1024),
+        skip_masked_blocks=opts.get("skip_masked_blocks", False))
+    o = o.reshape(*x.shape[:-1], cfg.q_size)
+    from repro.models.layers import linear  # local import to avoid cycle
+    o = linear({"w": slot_p["attn"]["wo"]}, o,
+               (lora_p or {}).get("o"), lora_mode)
+    if cfg.post_norm:
+        o = rmsnorm(slot_p["post1"], o, cfg.norm_eps)
+    return o, cache_slot
+
+
+def _ffn_block_full(slot_p: Dict, lora_p: Optional[Dict], x: jax.Array,
+                    cfg: ModelConfig, is_moe: bool, lora_mode: LoRAMode):
+    aux = {}
+    h = rmsnorm(slot_p["ln2"], x, cfg.norm_eps)
+    if is_moe:
+        y, aux = moe_lib.moe_block(slot_p["moe"], h, cfg, lora_p, lora_mode)
+    else:
+        y = mlp(slot_p["mlp"], h, act=cfg.act, glu=cfg.glu,
+                lora=lora_p, lora_mode=lora_mode)
+    if cfg.post_norm:
+        y = rmsnorm(slot_p["post2"], y, cfg.norm_eps)
+    return y, aux
+
+
+def _shared_attn_block(shared_p: Dict, lora_p: Optional[Dict], x: jax.Array,
+                       cfg: ModelConfig, positions: jax.Array,
+                       lora_mode: LoRAMode, opts: Dict) -> jax.Array:
+    """zamba2 weight-tied global attention + MLP block (full-seq)."""
+    h = rmsnorm(shared_p["ln1"], x, cfg.norm_eps)
+    q, k, v = attn_lib.project_qkv(shared_p["attn"], h, cfg, positions,
+                                   lora_p, lora_mode)
+    o = attn_lib.blockwise_attention(
+        q, k, v, positions, positions, kind="global", cfg=cfg,
+        block_q=opts.get("block_q", 512), block_kv=opts.get("block_kv", 1024),
+        skip_masked_blocks=opts.get("skip_masked_blocks", False))
+    from repro.models.layers import linear
+    o = linear({"w": shared_p["attn"]["wo"]},
+               o.reshape(*x.shape[:-1], cfg.q_size),
+               (lora_p or {}).get("o"), lora_mode)
+    x = x + o
+    h = rmsnorm(shared_p["ln2"], x, cfg.norm_eps)
+    return x + mlp(shared_p["mlp"], h, act=cfg.act, glu=cfg.glu)
+
+
+def forward_stack(params: Dict, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array,
+                  lora: Optional[Dict] = None,
+                  lora_mode: LoRAMode = LoRAMode(),
+                  opts: Optional[Dict] = None,
+                  cache: Optional[Dict] = None,
+                  seq_mask: Optional[jax.Array] = None,
+                  lengths: Optional[jax.Array] = None,
+                  ):
+    """x: [B, S, d] -> (hidden [B, S, d], aux losses[, filled cache]).
+
+    With ``cache`` provided this is the **prefill** path: attention slots
+    additionally bulk-write their K/V into the ring caches; SSM slots run
+    with ``return_state`` and store the final recurrent state. ``seq_mask``
+    / ``lengths`` handle right-padded prompt buckets exactly (see engine).
+    """
+    opts = opts or {}
+    period = stack_period(cfg)
+    remat = opts.get("remat", False)
+    lora_layers = (lora or {}).get("layers", {})
+    shared_lora = (lora or {}).get("shared_attn")
+    shared_params = params.get("shared_attn")
+    fill = cache is not None
+    slot_caches = ({k: v for k, v in cache.items() if k != "shared"}
+                   if fill else {})
+
+    def group_body(carry, group_leaves):
+        h, aux_lb, aux_z = carry
+        if fill and shared_params is not None:
+            gp, gl, gc, shared_c = group_leaves
+        elif fill:
+            gp, gl, gc = group_leaves
+            shared_c = None
+        else:
+            gp, gl = group_leaves
+            gc, shared_c = {}, None
+        new_gc = {}
+        for p in range(period):
+            kind = slot_kind(cfg, p)
+            sp = gp[f"slot{p}"]
+            lp = gl.get(f"slot{p}") if gl else None
+            cp = gc.get(f"slot{p}") if fill else None
+            if kind == "ssm":
+                hn = rmsnorm(sp["ln1"], h, cfg.norm_eps)
+                if fill:
+                    y, state, conv_tail = ssm_lib.ssm_block_full(
+                        sp["ssm"], hn, cfg, lp, lora_mode, return_state=True,
+                        seq_mask=seq_mask, lengths=lengths)
+                    cp = dict(cp,
+                              state=state.astype(cp["state"].dtype),
+                              conv=conv_tail.astype(cp["conv"].dtype))
+                    h = h + y
+                else:
+                    h = h + ssm_lib.ssm_block_full(sp["ssm"], hn, cfg, lp,
+                                                   lora_mode,
+                                                   seq_mask=seq_mask)
+                if "mlp" in sp:
+                    h = h + mlp(sp["mlp"], rmsnorm(sp["ln2"], h, cfg.norm_eps),
+                                act=cfg.act, glu=cfg.glu, lora=lp,
+                                lora_mode=lora_mode)
+            else:
+                o, cp = _attn_block_full(sp, lp, h, cfg, kind, positions,
+                                         lora_mode, opts, cp)
+                h = h + o
+                y, aux = _ffn_block_full(sp, lp, h, cfg, slot_is_moe(cfg, p),
+                                         lora_mode)
+                h = h + y
+                if aux:
+                    aux_lb = aux_lb + aux["load_balance"]
+                    aux_z = aux_z + aux["router_z"]
+            if fill:
+                new_gc[f"slot{p}"] = cp
+            h = logical_constraint(h, "batch", None, None)
+        if shared_params is not None:
+            if fill:
+                hs = rmsnorm(shared_params["ln1"], h, cfg.norm_eps)
+                q, k, v = attn_lib.project_qkv(shared_params["attn"], hs, cfg,
+                                               positions, shared_lora,
+                                               lora_mode)
+                shared_c = attn_lib.cache_fill(shared_c, k, v, positions)
+            h = _shared_attn_block(shared_params, shared_lora, h, cfg,
+                                   positions, lora_mode, opts)
+        ys = (new_gc, shared_c) if (fill and shared_params is not None) else (
+            new_gc if fill else None)
+        return (h, aux_lb, aux_z), ys
+
+    body = group_body
+    if remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    zero = jnp.zeros((), jnp.float32)
+    # an empty dict contributes no leaves, so scan slicing ignores it
+    if fill and shared_params is not None:
+        xs = (params["layers"], lora_layers or {}, slot_caches,
+              cache["shared"])
+    elif fill:
+        xs = (params["layers"], lora_layers or {}, slot_caches)
+    else:
+        xs = (params["layers"], lora_layers or {})
+    (h, lb, zl), ys = jax.lax.scan(body, (x, zero, zero), xs)
+    aux = {"load_balance": lb, "router_z": zl}
+    if fill and shared_params is not None:
+        new_caches, new_shared = ys
+        out_cache = dict(new_caches)
+        out_cache["shared"] = new_shared
+        return h, aux, out_cache
+    if fill:
+        return h, aux, dict(ys)
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# Cache init + decode step
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    period = stack_period(cfg)
+    ng = n_groups(cfg)
+    cache: Dict[str, Any] = {}
+    for p in range(period):
+        kind = slot_kind(cfg, p)
+        if kind == "ssm":
+            cache[f"slot{p}"] = ssm_lib.init_ssm_cache(batch, cfg, dtype,
+                                                       stack=(ng,))
+        else:
+            clen = cache_len_for(kind, cfg, max_len)
+            cache[f"slot{p}"] = attn_lib.init_kv_cache(
+                batch, clen, cfg.n_kv_heads, cfg.resolved_head_dim, dtype,
+                stack=(ng,), quant=cfg.attn.kv_cache_quant)
+    if cfg.shared_attn_every:
+        cache["shared"] = attn_lib.init_kv_cache(
+            batch, max_len, cfg.n_kv_heads, cfg.resolved_head_dim, dtype,
+            stack=(ng,), quant=cfg.attn.kv_cache_quant)
+    return cache
+
+
+def _attn_decode(sp: Dict, lp: Optional[Dict], h: jax.Array, cache_p: Dict,
+                 cfg: ModelConfig, kind: str, pos: jax.Array,
+                 lora_mode: LoRAMode):
+    """h: [B, d]; cache_p: one slot's KV cache (no group dim);
+    pos: scalar or [B] per-slot positions."""
+    from repro.models.layers import linear
+    b = h.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    x = rmsnorm(sp["ln1"], h, cfg.norm_eps)[:, None, :]  # [B, 1, d]
+    q, k, v = attn_lib.project_qkv(sp["attn"], x, cfg, pos[:, None], lp,
+                                   lora_mode)
+    cache_p = attn_lib.cache_update(cache_p, k, v, pos)
+    o = attn_lib.decode_attention(q[:, 0], cache_p, pos, kind=kind, cfg=cfg)
+    o = linear({"w": sp["attn"]["wo"]}, o.reshape(h.shape[0], 1, cfg.q_size),
+               (lp or {}).get("o"), lora_mode)[:, 0]
+    if cfg.post_norm:
+        o = rmsnorm(sp["post1"], o, cfg.norm_eps)
+    return o, cache_p
+
+
+def decode_stack(params: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+                 pos: jax.Array, lora: Optional[Dict] = None,
+                 lora_mode: LoRAMode = LoRAMode(),
+                 ) -> Tuple[jax.Array, Dict]:
+    """One decode step. x: [B, d]; pos: scalar or [B] int32 per-slot
+    positions. Returns (h, cache)."""
+    period = stack_period(cfg)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (x.shape[0],))
+    lora_layers = (lora or {}).get("layers", {})
+    shared_lora = (lora or {}).get("shared_attn")
+    shared_params = params.get("shared_attn")
+
+    slot_caches = {k: v for k, v in cache.items() if k != "shared"}
+    has_shared = cfg.shared_attn_every > 0
+
+    def group_body(h, leaves):
+        if has_shared:
+            gp, gl, gc, shared_cache = leaves
+        else:
+            gp, gl, gc = leaves
+            shared_cache = None
+        new_gc = {}
+        for p in range(period):
+            kind = slot_kind(cfg, p)
+            sp = gp[f"slot{p}"]
+            lp = gl.get(f"slot{p}") if gl else None
+            cp = gc[f"slot{p}"]
+            if kind == "ssm":
+                hn = rmsnorm(sp["ln1"], h, cfg.norm_eps)
+                y, cp = ssm_lib.ssm_block_decode(sp["ssm"], hn, cp, cfg, lp,
+                                                 lora_mode)
+                h = h + y
+                if "mlp" in sp:
+                    h = h + mlp(sp["mlp"],
+                                rmsnorm(sp["ln2"], h, cfg.norm_eps),
+                                act=cfg.act, glu=cfg.glu, lora=lp,
+                                lora_mode=lora_mode)
+            else:
+                o, cp = _attn_decode(sp, lp, h, cp, cfg, kind, pos, lora_mode)
+                h = h + o
+                hn = rmsnorm(sp["ln2"], h, cfg.norm_eps)[:, None, :]
+                if slot_is_moe(cfg, p):
+                    y, _ = moe_lib.moe_block(sp["moe"], hn, cfg, lp, lora_mode)
+                else:
+                    y = mlp(sp["mlp"], hn, act=cfg.act, glu=cfg.glu,
+                            lora=lp, lora_mode=lora_mode)
+                y = y[:, 0]
+                if cfg.post_norm:
+                    y = rmsnorm(sp["post2"], y, cfg.norm_eps)
+                h = h + y
+            new_gc[f"slot{p}"] = cp
+        if shared_params is not None:
+            from repro.models.layers import linear
+            sh = rmsnorm(shared_params["ln1"], h, cfg.norm_eps)[:, None, :]
+            q, k, v = attn_lib.project_qkv(
+                shared_params["attn"], sh, cfg, pos[:, None], shared_lora,
+                lora_mode)
+            sc = attn_lib.cache_update(shared_cache, k, v, pos)
+            o = attn_lib.decode_attention(q[:, 0], sc, pos, kind="global",
+                                          cfg=cfg)
+            o = linear({"w": shared_params["attn"]["wo"]},
+                       o.reshape(h.shape[0], 1, cfg.q_size),
+                       (shared_lora or {}).get("o"), lora_mode)[:, 0]
+            h = h + o
+            h = h + mlp(shared_params["mlp"],
+                        rmsnorm(shared_params["ln2"], h, cfg.norm_eps),
+                        act=cfg.act, glu=cfg.glu)
+            return h, (new_gc, sc)
+        return h, (new_gc,)
+
+    lora_stacked = lora_layers or {}
+
+    if has_shared:
+        def body(h, leaves):
+            h, (ngc, nsc) = group_body(h, leaves)
+            return h, (ngc, nsc)
+        h, (new_caches, new_shared) = jax.lax.scan(
+            body, x, (params["layers"], lora_stacked, slot_caches,
+                      cache["shared"]))
+        out_cache = dict(new_caches)
+        out_cache["shared"] = new_shared
+        return h, out_cache
+
+    def body3(h, leaves):
+        h, (ngc,) = group_body(h, leaves)
+        return h, ngc
+
+    h, new_caches = jax.lax.scan(
+        body3, x, (params["layers"], lora_stacked, slot_caches))
+    return h, dict(new_caches)

@@ -1,0 +1,6 @@
+from repro.serving.engine import EdgeLoRAEngine, EngineConfig
+from repro.serving.workload import WorkloadConfig, generate_trace
+from repro.serving.metrics import summarize
+
+__all__ = ["EdgeLoRAEngine", "EngineConfig", "WorkloadConfig",
+           "generate_trace", "summarize"]

@@ -1,0 +1,418 @@
+"""EdgeLoRA serving engine: continuous batching across heterogeneous
+adapters (paper §3/§4), plus the llama.cpp-style baseline policy.
+
+Architecture mirrors the paper: a **Server Manager** (slot state machine +
+adaptive adapter selection + heterogeneous memory manager, host-side
+Python) drives a **Computing Backend** (jit'd JAX prefill/decode steps over
+static shapes). The decode step batches *all* slots regardless of which
+adapter each uses — Batch LoRA Inference — with per-slot adapter pool ids
+flowing into ``LoRAMode('batched', ...)``.
+
+Timing model: the engine advances a virtual clock by *measured* wall-times
+of the jit'd steps (each unique shape warmed at init, so compile never
+pollutes the timeline). Adapter swap-ins charge ``adapter_bytes /
+disk_bandwidth`` and llama.cpp-style merge switches charge a
+merge/unmerge byte cost — both documented simulation knobs (DESIGN.md §8).
+
+Scheduler policies:
+
+* ``edgelora``          — full system (adaptive adapter selection ON)
+* ``edgelora_no_aas``   — adapters pinned by the request (paper's w/o-AAS)
+* ``llamacpp``          — baseline: all adapters preloaded (OOM-checked
+  against a memory budget), only same-adapter requests batch together,
+  adapter switches merge/unmerge weights (paper §2.2, §5 baseline)
+* ``dlora``             — dLoRA-style baseline (OSDI'24, paper related
+  work): dynamically switches between MERGED execution (the hot adapter
+  folded into W: zero LoRA overhead but same-adapter batching only) and
+  UNMERGED batched execution, driven by recent queue adapter diversity
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.adapter_cache import AdapterMemoryManager
+from repro.core.lora import LoRAMode
+from repro.core.router import OracleRouter, select_adapter
+from repro.core.slots import Request, Slot, SlotManager, SlotState
+from repro.models import build_model
+from repro.serving.metrics import ServingSummary, summarize
+
+
+class OutOfMemoryError(RuntimeError):
+    """Adapter working set exceeds the device memory budget (the paper's
+    OOM cells in Tables 4-6)."""
+
+
+@dataclass
+class EngineConfig:
+    n_slots: int = 8                 # γ
+    top_k: int = 3                   # k (Algorithm 1)
+    policy: str = "edgelora"         # edgelora | edgelora_no_aas | llamacpp
+    max_ctx: int = 512               # KV capacity per slot
+    prompt_buckets: Tuple[int, ...] = (32, 64, 128, 256)
+    disk_bandwidth: float = 1.0e9    # adapter swap-in bytes/s (host->HBM)
+    mem_bandwidth: float = 60.0e9    # merge/unmerge traffic (llama.cpp mode)
+    memory_budget: float = 6.0e9     # adapter memory budget (llamacpp preload)
+    # dlora policy: switch to merged execution when the last
+    # `dlora_window` admissions used ≤ `dlora_merge_uniques` adapters
+    dlora_window: int = 8
+    dlora_merge_uniques: int = 2
+    cache_policy: str = "lru"
+    slo_seconds: float = 6.0
+    router_accuracy: float = 0.95
+    time_scale: float = 1.0          # measured-seconds -> sim-seconds
+    seed: int = 0
+
+
+class EdgeLoRAEngine:
+    def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
+                 router=None, params=None):
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+        self.model = build_model(cfg)
+        rng = jax.random.PRNGKey(engine_cfg.seed)
+        self.params = params if params is not None else self.model.init(rng)
+        self.n_pool = cfg.lora.max_resident
+        self.lora_pool = self.model.init_lora(
+            jax.random.PRNGKey(engine_cfg.seed + 1), n_slots=self.n_pool)
+        self.adapter_bytes = cfg.lora_adapter_bytes()
+        self.router = router or OracleRouter(
+            cfg.lora.n_adapters, accuracy=engine_cfg.router_accuracy,
+            seed=engine_cfg.seed)
+
+        if engine_cfg.policy == "llamacpp":
+            total = cfg.lora.n_adapters * self.adapter_bytes
+            if total > engine_cfg.memory_budget:
+                raise OutOfMemoryError(
+                    f"llama.cpp preloads all adapters: "
+                    f"{cfg.lora.n_adapters} × {self.adapter_bytes/1e6:.2f}MB "
+                    f"= {total/1e6:.2f}MB > budget "
+                    f"{engine_cfg.memory_budget/1e6:.2f}MB")
+
+        self.manager = AdapterMemoryManager(
+            self.n_pool, load_fn=self._load_adapter,
+            policy=engine_cfg.cache_policy)
+        self.slots = SlotManager(engine_cfg.n_slots)
+        self._pending_load_cost = 0.0
+        self._build_steps()
+        self._durations: Dict[Any, float] = {}
+        self.busy_time = 0.0
+        self.manager.prefill_random(list(range(
+            min(cfg.lora.n_adapters, self.n_pool))))
+        self._pending_load_cost = 0.0  # init prefill is free (server start)
+
+    # ------------------------------------------------------------------
+    # device-side adapter pool (heterogeneous memory manager, device face)
+    # ------------------------------------------------------------------
+
+    _LEAD_AXIS = {"layers": 1, "shared_attn": 0, "encoder": 1,
+                  "decoder": 1, "cross": 1}
+
+    def _adapter_host(self, adapter_id: int):
+        """'Disk' fetch: adapters are deterministic functions of their id
+        (stand-in for real checkpoint files; same bytes, same latency)."""
+        return self.model.init_lora(jax.random.PRNGKey(10_000 + adapter_id))
+
+    def _load_adapter(self, adapter_id: int, slot: int) -> None:
+        adapter = self._adapter_host(adapter_id)
+        new_pool = {}
+        for key, sub in self.lora_pool.items():
+            ax = self._LEAD_AXIS[key]
+            new_pool[key] = jax.tree.map(
+                lambda p, a: jax.lax.dynamic_update_index_in_dim(
+                    p, a.astype(p.dtype), slot, axis=ax), sub, adapter[key])
+        self.lora_pool = new_pool
+        self._pending_load_cost += self.adapter_bytes / self.ecfg.disk_bandwidth
+
+    # ------------------------------------------------------------------
+    # jit'd compute steps
+    # ------------------------------------------------------------------
+
+    def _build_steps(self):
+        model, cfg = self.model, self.cfg
+        scale = cfg.lora.scale
+
+        def prefill_fn(params, pool, tokens, cache1, slot_id, length):
+            mode = LoRAMode("batched", slot_id, scale)
+            logits, cache1 = model.prefill(params, {"tokens": tokens},
+                                           cache1, pool, mode,
+                                           lengths=length)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache1
+
+        def decode_fn(params, pool, tokens, cache, pos, slot_ids):
+            mode = LoRAMode("batched", slot_ids, scale)
+            logits, cache = model.decode_step(params, tokens, cache, pos,
+                                              pool, mode)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        # merged-execution variants (dlora policy): the adapter lives
+        # folded into W, so the step skips LoRA math entirely
+        def prefill_merged(params, tokens, cache1, length):
+            logits, cache1 = model.prefill(params, {"tokens": tokens},
+                                           cache1, lengths=length)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache1
+
+        def decode_merged(params, tokens, cache, pos):
+            logits, cache = model.decode_step(params, tokens, cache, pos)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        # no donation: the _timed warmup re-invokes with the same buffers
+        # (donation is a TPU-memory optimization, irrelevant on the CPU path)
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        self._prefill_merged = jax.jit(prefill_merged)
+        self._decode_merged = jax.jit(decode_merged)
+
+        def write_slot(gcache, lcache, slot):
+            return jax.tree.map(
+                lambda g, l: jax.lax.dynamic_update_slice_in_dim(
+                    g, l.astype(g.dtype), slot, axis=1), gcache, lcache)
+
+        self._write_slot = jax.jit(write_slot)
+        self.cache = self.model.init_cache(self.ecfg.n_slots,
+                                           self.ecfg.max_ctx)
+        self._cache1_template = self.model.init_cache(1, self.ecfg.max_ctx)
+
+    def _bucket(self, n: int) -> int:
+        for b in self.ecfg.prompt_buckets:
+            if n <= b:
+                return b
+        return self.ecfg.prompt_buckets[-1]
+
+    def _timed(self, key, fn, *args):
+        """Run fn; charge its measured duration (first call per key warms
+        the jit cache and is *not* charged)."""
+        if key not in self._durations:
+            out = fn(*args)  # compile + run (warmup, uncharged)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            self._durations[key] = (time.perf_counter() - t0)
+        else:
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            self._durations[key] = 0.5 * self._durations[key] + 0.5 * (
+                time.perf_counter() - t0)
+        dt = self._durations[key] * self.ecfg.time_scale
+        self.busy_time += dt
+        return out, dt
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+
+    def serve(self, trace: List[Request],
+              max_sim_time: Optional[float] = None) -> ServingSummary:
+        ecfg = self.ecfg
+        now = 0.0
+        queue = sorted(trace, key=lambda r: r.arrival_time)
+        qi = 0
+        completed: List[Request] = []
+        active_adapter: Optional[int] = None  # llamacpp single-active mode
+        dlora_mode = "unmerged"               # dlora dynamic mode
+        dlora_merged_adapter: Optional[int] = None
+
+        def dlora_desired():
+            """Look ahead over the next window of pending requests: merge
+            when the queue is dominated by few adapters (dLoRA §3)."""
+            ahead = [r.true_adapter for r in
+                     queue[qi:qi + ecfg.dlora_window]]
+            if not ahead:
+                return dlora_mode, dlora_merged_adapter
+            uniq = set(ahead)
+            # merge on the HEAD's adapter only (FIFO stays serviceable)
+            if len(uniq) <= ecfg.dlora_merge_uniques \
+                    and ahead.count(ahead[0]) * 2 >= len(ahead):
+                return "merged", ahead[0]
+            return "unmerged", None
+
+        def arrivals_ready():
+            return qi < len(queue) and queue[qi].arrival_time <= now
+
+        while len(completed) < len(queue):
+            if max_sim_time is not None and now > max_sim_time:
+                break
+            progressed = False
+
+            # ---- admission -------------------------------------------
+            idle = self.slots.idle()
+            if ecfg.policy == "dlora" and idle and arrivals_ready():
+                want_mode, want_adapter = dlora_desired()
+                if (want_mode, want_adapter) != (dlora_mode,
+                                                 dlora_merged_adapter):
+                    if self.slots.any_active:
+                        idle = []  # drain before switching modes
+                    else:
+                        # unmerge old and/or merge new: weight-sized traffic
+                        cost = 0.0
+                        if dlora_merged_adapter is not None:
+                            cost += 2 * self.adapter_bytes / ecfg.mem_bandwidth
+                        if want_adapter is not None:
+                            cost += 2 * self.adapter_bytes / ecfg.mem_bandwidth
+                        now += cost
+                        dlora_mode, dlora_merged_adapter = (want_mode,
+                                                            want_adapter)
+            while idle and arrivals_ready():
+                req = queue[qi]
+                if ecfg.policy == "dlora" and dlora_mode == "merged" \
+                        and req.true_adapter != dlora_merged_adapter:
+                    break  # merged mode serves only the folded adapter
+                if ecfg.policy == "llamacpp":
+                    want = req.true_adapter
+                    if active_adapter is None:
+                        active_adapter = want
+                        # merge the adapter into the base weights
+                        now += 2 * self.adapter_bytes / ecfg.mem_bandwidth
+                    if want != active_adapter:
+                        if self.slots.any_active:
+                            break  # must drain before switching adapters
+                        # unmerge old + merge new
+                        now += 4 * self.adapter_bytes / ecfg.mem_bandwidth
+                        active_adapter = want
+                slot = idle.pop()
+                slot.assign(req)
+                qi += 1
+                progressed = True
+
+            # ---- adapter selection (Algorithm 1) ---------------------
+            for slot in self.slots.in_state(SlotState.SELECTING):
+                req = slot.request
+                if ecfg.policy == "dlora":
+                    req.selected_adapter = req.true_adapter
+                    slot.merged = dlora_mode == "merged"
+                    if not slot.merged:
+                        pool_slot, _ = self.manager.acquire(
+                            req.selected_adapter)
+                        self.manager.pin(req.selected_adapter)
+                        now += self._pending_load_cost
+                        self._pending_load_cost = 0.0
+                        slot.adapter_slot = pool_slot
+                    else:
+                        slot.adapter_slot = 0
+                    slot.state = SlotState.PREFILL
+                    progressed = True
+                    continue
+                slot.merged = False
+                if ecfg.policy == "llamacpp":
+                    req.selected_adapter = req.true_adapter
+                elif ecfg.policy == "edgelora_no_aas" or req.adapter_id is not None:
+                    # explicit adapter: bypass adaptive selection (Alg 1 l.1)
+                    req.selected_adapter = (req.adapter_id
+                                            if req.adapter_id is not None
+                                            else req.true_adapter)
+                else:
+                    if getattr(self.router, "costs_forward", False):
+                        # router forward ≈ one prompt pass (paper Table 6)
+                        b = self._bucket(req.prompt_len)
+                        toks = self._padded_prompt(req, b)[None, :]
+                        _, dt = self._timed(("router", b),
+                                            self.router.scores_batch, toks)
+                        now += dt
+                        scores = self.router.scores_batch(toks)[0]
+                    else:
+                        scores = self.router.scores(req)
+                    aid, _ = select_adapter(np.asarray(scores), self.manager,
+                                            ecfg.top_k)
+                    req.selected_adapter = aid
+                if ecfg.policy != "llamacpp":
+                    pool_slot, loaded = self.manager.acquire(
+                        req.selected_adapter)
+                    self.manager.pin(req.selected_adapter)
+                    now += self._pending_load_cost
+                    self._pending_load_cost = 0.0
+                else:
+                    pool_slot = 0  # merged weights: adapter rides W
+                slot.adapter_slot = pool_slot
+                slot.state = SlotState.PREFILL
+                progressed = True
+
+            # ---- prefill ---------------------------------------------
+            for slot in self.slots.in_state(SlotState.PREFILL):
+                req = slot.request
+                b = self._bucket(req.prompt_len)
+                toks = self._padded_prompt(req, b)[None, :]
+                cache1 = jax.tree.map(jnp.copy, self._cache1_template)
+                plen = jnp.array([req.prompt_len], jnp.int32)
+                if getattr(slot, "merged", False):
+                    (first_tok, cache1), dt = self._timed(
+                        ("prefill_merged", b), self._prefill_merged,
+                        self.params, toks, cache1, plen)
+                else:
+                    sid = jnp.array([slot.adapter_slot], jnp.int32)
+                    (first_tok, cache1), dt = self._timed(
+                        ("prefill", b), self._prefill, self.params,
+                        self.lora_pool, toks, cache1, sid, plen)
+                now += dt
+                self.cache = self._write_slot(self.cache, cache1,
+                                              slot.index)
+                slot.pos = req.prompt_len
+                slot.last_token = int(first_tok[0])
+                req.first_token_time = now
+                req.generated = 1
+                slot.state = SlotState.GENERATE
+                progressed = True
+
+            # ---- batched decode (Batch LoRA Inference) ----------------
+            gen = self.slots.in_state(SlotState.GENERATE)
+            if gen:
+                tokens = np.zeros((ecfg.n_slots,), np.int32)
+                pos = np.zeros((ecfg.n_slots,), np.int32)
+                sids = np.zeros((ecfg.n_slots,), np.int32)
+                for slot in gen:
+                    tokens[slot.index] = slot.last_token
+                    pos[slot.index] = slot.pos
+                    sids[slot.index] = slot.adapter_slot
+                if ecfg.policy == "dlora" and dlora_mode == "merged":
+                    (next_toks, self.cache), dt = self._timed(
+                        ("decode_merged",), self._decode_merged,
+                        self.params, jnp.asarray(tokens), self.cache,
+                        jnp.asarray(pos))
+                else:
+                    (next_toks, self.cache), dt = self._timed(
+                        ("decode",), self._decode, self.params,
+                        self.lora_pool, jnp.asarray(tokens), self.cache,
+                        jnp.asarray(pos), jnp.asarray(sids))
+                now += dt
+                next_np = np.asarray(next_toks)
+                for slot in gen:
+                    req = slot.request
+                    slot.last_token = int(next_np[slot.index])
+                    slot.pos += 1
+                    req.generated += 1
+                    if req.generated >= req.output_len \
+                            or slot.pos >= ecfg.max_ctx - 1:
+                        req.finish_time = now
+                        if ecfg.policy != "llamacpp" \
+                                and not getattr(slot, "merged", False):
+                            self.manager.unpin(req.selected_adapter)
+                        completed.append(slot.release())
+                progressed = True
+                if ecfg.policy == "llamacpp" and not self.slots.any_active:
+                    pass  # adapter switch decided at next admission
+
+            # ---- idle: jump to next arrival ---------------------------
+            if not progressed:
+                if qi < len(queue):
+                    now = max(now, queue[qi].arrival_time)
+                else:
+                    break
+
+        duration = max(now, 1e-9)
+        return summarize(queue, duration, ecfg.slo_seconds,
+                         cache_stats=self.manager.stats,
+                         energy_proxy=self.busy_time / duration)
+
+    def _padded_prompt(self, req: Request, bucket: int) -> jax.Array:
+        toks = np.zeros((bucket,), np.int32)
+        n = min(req.prompt_len, bucket)
+        toks[:n] = np.asarray(req.prompt_tokens)[:n]  # right-padded
+        return jnp.asarray(toks)

@@ -1,0 +1,124 @@
+"""Paged KV-block pool: the paper's pre-allocated-pool discipline applied
+to KV memory (vLLM-style paging, pool-block flavored).
+
+The heterogeneous memory manager (§3.3) avoids runtime allocation by
+carving adapter memory into fixed blocks; the same discipline applies to
+KV context memory: a fixed arena of ``n_blocks`` physical pages of
+``block_size`` tokens each, a free stack, and per-sequence block tables.
+This lets γ slots share one arena sized for the *expected* total context
+instead of γ × max_ctx — the overcommit that makes large-γ serving fit on
+a small device.
+
+Host-side manager (allocation is a scheduling concern); the device-side
+face is a gather by block table (``gather_kv``, pure-jnp reference used
+by tests — the TPU path would fold the page gather into the flash-decode
+index_map exactly like the SGMV scalar-prefetch pattern).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class OutOfBlocksError(RuntimeError):
+    pass
+
+
+@dataclass
+class KVPoolStats:
+    allocs: int = 0
+    frees: int = 0
+    peak_used: int = 0
+
+
+class PagedKVPool:
+    """Fixed arena of KV pages with per-sequence block tables."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        assert n_blocks > 0 and block_size > 0
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.free: List[int] = list(range(n_blocks))[::-1]
+        self.tables: Dict[int, List[int]] = {}
+        self.lengths: Dict[int, int] = {}
+        self.stats = KVPoolStats()
+
+    # ------------------------------------------------------------------
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self.free)
+
+    def register(self, seq_id: int) -> None:
+        assert seq_id not in self.tables, seq_id
+        self.tables[seq_id] = []
+        self.lengths[seq_id] = 0
+
+    def release(self, seq_id: int) -> None:
+        for blk in self.tables.pop(seq_id):
+            self.free.append(blk)
+            self.stats.frees += 1
+        del self.lengths[seq_id]
+
+    def append_tokens(self, seq_id: int, n: int = 1) -> List[int]:
+        """Extend seq by n tokens, allocating pages on demand. Returns the
+        (possibly empty) list of newly allocated physical blocks."""
+        table = self.tables[seq_id]
+        length = self.lengths[seq_id]
+        needed = -(-(length + n) // self.block_size)
+        n_new = needed - len(table)
+        if n_new > len(self.free):
+            # all-or-nothing: never leave a partially-extended table
+            raise OutOfBlocksError(
+                f"KV arena exhausted: need {n_new} blocks, "
+                f"{len(self.free)} free of {self.n_blocks} × "
+                f"{self.block_size} tokens")
+        new = []
+        for _ in range(n_new):
+            blk = self.free.pop()
+            table.append(blk)
+            new.append(blk)
+            self.stats.allocs += 1
+        self.lengths[seq_id] = length + n
+        self.stats.peak_used = max(self.stats.peak_used, self.used_blocks)
+        return new
+
+    def slot_of(self, seq_id: int, pos: int):
+        """(physical block, offset) of token ``pos`` of sequence seq_id."""
+        assert pos < self.lengths[seq_id]
+        table = self.tables[seq_id]
+        return table[pos // self.block_size], pos % self.block_size
+
+    def block_table(self, seq_id: int, max_blocks: int) -> np.ndarray:
+        """Padded physical-block table for device-side gathers (-1 pad)."""
+        t = self.tables[seq_id]
+        out = np.full(max_blocks, -1, np.int32)
+        out[:len(t)] = t
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Device-side reference: gather a sequence's KV out of the paged arena
+# ---------------------------------------------------------------------------
+
+
+def write_kv(arena: np.ndarray, pool: PagedKVPool, seq_id: int, pos: int,
+             value: np.ndarray) -> None:
+    """arena: [n_blocks, block_size, ...]; writes token ``pos``'s KV."""
+    blk, off = pool.slot_of(seq_id, pos)
+    arena[blk, off] = value
+
+
+def gather_kv(arena: np.ndarray, table: np.ndarray, length: int
+              ) -> np.ndarray:
+    """Reference paged read: [length, ...] contiguous KV for a sequence.
+
+    table: padded block table (-1 pad); arena: [n_blocks, block_size, ...].
+    """
+    block_size = arena.shape[1]
+    n = -(-length // block_size)
+    pages = arena[table[:n]]                       # [n, block_size, ...]
+    flat = pages.reshape(-1, *arena.shape[2:])
+    return flat[:length]

@@ -1,0 +1,59 @@
+"""Serving metrics (paper §5, Metrics): throughput, average request
+latency, average first-token latency, SLO attainment (first token within
+``slo_seconds``), plus an energy *proxy* (bytes+FLOPs; see DESIGN.md §8 —
+no wattmeter exists in this container)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.slots import Request
+
+
+@dataclass
+class ServingSummary:
+    n_requests: int
+    n_completed: int
+    duration: float
+    throughput: float            # completed req/s
+    avg_latency: float           # arrival -> finish
+    avg_first_token: float       # arrival -> first token
+    p99_first_token: float
+    slo_attainment: float        # fraction with first token < slo
+    tokens_per_second: float
+    cache_hit_rate: Optional[float] = None
+    adapter_loads: Optional[int] = None
+    energy_proxy: Optional[float] = None
+
+    def row(self) -> Dict[str, float]:
+        return {k: getattr(self, k) for k in (
+            "throughput", "avg_latency", "avg_first_token",
+            "slo_attainment", "tokens_per_second")}
+
+
+def summarize(requests: List[Request], duration: float,
+              slo_seconds: float = 6.0, cache_stats=None,
+              energy_proxy: Optional[float] = None) -> ServingSummary:
+    done = [r for r in requests if r.finish_time is not None]
+    lat = np.array([r.finish_time - r.arrival_time for r in done]) \
+        if done else np.array([np.nan])
+    ftl = np.array([r.first_token_time - r.arrival_time for r in done
+                    if r.first_token_time is not None]) \
+        if done else np.array([np.nan])
+    tokens = sum(r.generated for r in done)
+    return ServingSummary(
+        n_requests=len(requests),
+        n_completed=len(done),
+        duration=duration,
+        throughput=len(done) / duration if duration > 0 else 0.0,
+        avg_latency=float(np.mean(lat)),
+        avg_first_token=float(np.mean(ftl)) if ftl.size else float("nan"),
+        p99_first_token=float(np.percentile(ftl, 99)) if ftl.size else float("nan"),
+        slo_attainment=float(np.mean(ftl < slo_seconds)) if ftl.size else 0.0,
+        tokens_per_second=tokens / duration if duration > 0 else 0.0,
+        cache_hit_rate=cache_stats.hit_rate if cache_stats else None,
+        adapter_loads=cache_stats.loads if cache_stats else None,
+        energy_proxy=energy_proxy,
+    )

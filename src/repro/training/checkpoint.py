@@ -1,0 +1,66 @@
+"""Checkpointing: pytree ⇄ .npz with path-flattened keys.
+
+Shard-aware in the practical sense for this repo: arrays are gathered to
+host (process-local; multi-host would layer orbax/tensorstore here —
+documented boundary), dtypes preserved, adapters save independently of the
+base model so the serving engine's "disk" can be a directory of adapter
+checkpoints (the paper's swap source).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+_SEP = "::"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    # bf16 has no numpy dtype: save as uint16 view with a marker
+    out = {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            out["BF16" + _SEP + k] = v.view(np.uint16)
+        else:
+            out[k] = v
+    np.savez(path, **out)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path)
+    arrays = {}
+    for k in data.files:
+        if k.startswith("BF16" + _SEP):
+            arrays[k[len("BF16" + _SEP):]] = data[k].view(jnp.bfloat16)
+        else:
+            arrays[k] = data[k]
+
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)
+    flat, treedef = leaves_with_path
+    out_leaves = []
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)

@@ -1,0 +1,73 @@
+"""AdamW with warmup-cosine schedule, built in-tree (no optax offline).
+
+State and updates are plain pytrees so they shard with the same
+``param_specs`` rules as the parameters they mirror (first/second moments
+inherit the param's PartitionSpec under GSPMD propagation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any    # first moment (pytree like params)
+    nu: Any    # second moment
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def warmup_cosine(step: jax.Array, *, peak_lr: float, warmup: int,
+                  total: int, floor: float = 0.1) -> jax.Array:
+    step_f = step.astype(jnp.float32)
+    warm = peak_lr * step_f / max(warmup, 1)
+    progress = jnp.clip((step_f - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+    return jnp.where(step_f < warmup, warm, cos)
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any, *,
+                 lr: float | jax.Array = 1e-4, b1: float = 0.9,
+                 b2: float = 0.999, eps: float = 1e-8,
+                 weight_decay: float = 0.0,
+                 max_grad_norm: Optional[float] = 1.0,
+                 ) -> Tuple[Any, AdamWState, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    if max_grad_norm is not None:
+        clip = jnp.minimum(1.0, max_grad_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * clip.astype(g.dtype), grads)
+
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), gnorm

@@ -1,0 +1,109 @@
+"""Adapter-router training (paper §4.1).
+
+The router is the frozen base model trunk + one Linear head
+[d_model → n_adapters], trained as a multi-label classifier with
+BCE-with-logits on profiling data: labels mark which adapters produce
+correct responses for a prompt (here: synthetic task→adapter affinities
+from ``training/data.py``; the paper uses five eval-harness benchmarks).
+
+Only the head trains (the paper fine-tunes a LoRA on the trunk too; the
+head-only variant is the memory-minimal one its §4.1 motivates — the trunk
+is shared with serving so the router adds just [d, n_adapters] bytes).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.training.optimizer import adamw_init, adamw_update
+
+
+def init_router_head(rng: jax.Array, d_model: int, n_adapters: int) -> Dict:
+    w = jax.random.normal(rng, (d_model, n_adapters), jnp.float32) * 0.02
+    return {"w": w, "b": jnp.zeros((n_adapters,), jnp.float32)}
+
+
+def bce_with_logits(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """torch.nn.BCEWithLogitsLoss equivalent (mean over all entries)."""
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def make_router_step(model: Model, lr: float = 1e-3):
+    from repro.models import transformer
+
+    def trunk_features(params, tokens):
+        from repro.models.layers import rmsnorm
+        x = model.embed(params, tokens)
+        positions = jnp.arange(tokens.shape[1])
+        h, _ = transformer.forward_stack(params, x, model.cfg, positions)
+        # mean-pool over the prompt (the paper leaves pooling unspecified;
+        # mean is markedly more informative than last-token for the
+        # synthetic profiling prompts — see DESIGN.md §8)
+        h = rmsnorm(params["final_norm"], h.mean(axis=1), model.cfg.norm_eps)
+        return h.astype(jnp.float32)
+
+    def loss_fn(head, feats, labels):
+        logits = feats @ head["w"] + head["b"]
+        return bce_with_logits(logits, labels)
+
+    @jax.jit
+    def features(params, tokens):
+        return trunk_features(params, tokens)
+
+    @jax.jit
+    def step(head, opt, feats, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(head, feats, labels)
+        head, opt, _ = adamw_update(grads, opt, head, lr=lr)
+        return head, opt, loss
+
+    return features, step
+
+
+def train_router(model: Model, params, prompts: np.ndarray,
+                 labels: np.ndarray, *, epochs: int = 3,
+                 batch_size: int = 16, lr: float = 1e-3,
+                 rng: Optional[jax.Array] = None,
+                 log_fn=print) -> Tuple[Dict, float]:
+    """Returns (head, final train loss). Features are precomputed once —
+    the trunk is frozen, so this is both faithful and fast."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    n, n_adapters = labels.shape
+    head = init_router_head(rng, model.cfg.d_model, n_adapters)
+    opt = adamw_init(head)
+    features, step = make_router_step(model, lr)
+
+    feats = []
+    for i in range(0, n, batch_size):
+        feats.append(features(params, jnp.asarray(prompts[i:i + batch_size])))
+    feats = jnp.concatenate(feats, 0)
+    labels_j = jnp.asarray(labels)
+
+    order = np.arange(n)
+    loss = float("nan")
+    nrng = np.random.default_rng(0)
+    for ep in range(epochs):
+        nrng.shuffle(order)
+        for i in range(0, n, batch_size):
+            idx = order[i:i + batch_size]
+            head, opt, loss = step(head, opt, feats[idx], labels_j[idx])
+        log_fn(f"router epoch {ep}: bce {float(loss):.4f}")
+    return head, float(loss)
+
+
+def router_accuracy(model: Model, params, head: Dict, prompts: np.ndarray,
+                    labels: np.ndarray, batch_size: int = 16) -> float:
+    """Top-1 'suitable adapter' accuracy: argmax score lands on a positive
+    label (the paper's router quality notion, Table 12)."""
+    features, _ = make_router_step(model)
+    correct = 0
+    for i in range(0, len(prompts), batch_size):
+        f = features(params, jnp.asarray(prompts[i:i + batch_size]))
+        scores = f @ head["w"] + head["b"]
+        pred = np.asarray(jnp.argmax(scores, -1))
+        correct += int(labels[np.arange(i, i + len(pred)), pred].sum())
+    return correct / len(prompts)

@@ -1,0 +1,121 @@
+"""Training substrate: LoRA fine-tuning step (the paper's setting — the
+base model is frozen, adapters are the trainable artifact) plus a
+full-parameter option for completeness.
+
+``make_train_step`` builds a jit-able step:
+    state, metrics = step(state, batch)
+with cross-entropy next-token loss + MoE aux losses, AdamW over LoRA
+params only, cosine schedule, grad clipping. Distribution comes from the
+caller (launch/train.py jits with shardings); the step itself is
+mesh-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import LoRAMode
+from repro.models.model import Model
+from repro.training.optimizer import (AdamWState, adamw_init, adamw_update,
+                                      warmup_cosine)
+
+
+class TrainState(NamedTuple):
+    params: Any          # frozen base params (bf16)
+    lora: Any            # trainable adapter (f32)
+    opt: AdamWState      # optimizer state over `lora` only
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def make_train_step(model: Model, *, peak_lr: float = 1e-4,
+                    warmup: int = 50, total_steps: int = 1000,
+                    weight_decay: float = 0.0,
+                    train_base: bool = False,
+                    remat: bool = False) -> Callable:
+    """LoRA fine-tune step (train_base=False) or full fine-tune step."""
+    cfg = model.cfg
+    scale = cfg.lora.scale
+    opts = {"remat": remat}
+
+    def loss_fn(lora, params, batch):
+        tokens = batch["tokens"]
+        inp = {k: v for k, v in batch.items() if k != "tokens"}
+        inp["tokens"] = tokens[:, :-1]
+        mode = LoRAMode("single", None, scale) if lora is not None \
+            else LoRAMode()
+        logits, aux = model.forward(params, inp, lora, mode, opts)
+        loss = cross_entropy(logits, tokens[:, 1:],
+                             batch.get("loss_mask"))
+        total = loss + sum(aux.values()) if aux else loss
+        return total, {"loss": loss, **aux}
+
+    if train_base:
+        def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+            def full_loss(params):
+                return loss_fn(state.lora, params, batch)
+            (_, metrics), grads = jax.value_and_grad(
+                full_loss, has_aux=True)(state.params)
+            lr = warmup_cosine(state.opt.step + 1, peak_lr=peak_lr,
+                               warmup=warmup, total=total_steps)
+            new_params, new_opt, gnorm = adamw_update(
+                grads, state.opt, state.params, lr=lr,
+                weight_decay=weight_decay)
+            metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+            return TrainState(new_params, state.lora, new_opt), metrics
+        return step
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.lora, state.params, batch)
+        lr = warmup_cosine(state.opt.step + 1, peak_lr=peak_lr,
+                           warmup=warmup, total=total_steps)
+        new_lora, new_opt, gnorm = adamw_update(
+            grads, state.opt, state.lora, lr=lr, weight_decay=weight_decay)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(state.params, new_lora, new_opt), metrics
+
+    return step
+
+
+def init_train_state(model: Model, rng: jax.Array,
+                     train_base: bool = False) -> TrainState:
+    kp, kl = jax.random.split(rng)
+    params = model.init(kp)
+    lora = model.init_lora(kl)  # single adapter, f32
+    opt = adamw_init(params if train_base else lora)
+    return TrainState(params, lora, opt)
+
+
+def train_loop(model: Model, batches, n_steps: int, *,
+               rng: Optional[jax.Array] = None, log_every: int = 10,
+               state: Optional[TrainState] = None,
+               log_fn: Callable[[str], None] = print,
+               **step_kwargs) -> Tuple[TrainState, list]:
+    """Minimal driver used by examples/tests (single host)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    state = state or init_train_state(model, rng)
+    step = jax.jit(make_train_step(model, total_steps=n_steps,
+                                   **step_kwargs))
+    history = []
+    for i in range(n_steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        state, metrics = step(state, batch)
+        if i % log_every == 0 or i == n_steps - 1:
+            loss = float(metrics["loss"])
+            history.append((i, loss))
+            log_fn(f"step {i:5d}  loss {loss:.4f}  "
+                   f"gnorm {float(metrics['grad_norm']):.3f}")
+    return state, history

@@ -1,0 +1,25 @@
+import os
+
+# Tests and benches must see the single real CPU device (the 512-device
+# override is dryrun.py-only, per the assignment contract).
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""), "do not set the dry-run device override globally"
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced_config
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(arch: str):
+    return reduced_config(get_config(arch))
+
+
+@pytest.fixture(scope="session")
+def tiny_dense():
+    return tiny("qwen2-0.5b")

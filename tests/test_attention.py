@@ -1,0 +1,134 @@
+"""Attention: blockwise-flash vs naive reference, masks, ring cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.models import attention as A
+
+
+def naive_attention(q, k, v, qpos, kpos, mask_fn, softcap=None):
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd).astype(np.float32)
+    s = np.einsum("bqkgd,bskd->bkgqs", qg, np.asarray(k, np.float32))
+    s = s * hd ** -0.5
+    if softcap:
+        s = np.tanh(s / softcap) * softcap
+    m = mask_fn(np.asarray(qpos)[:, None], np.asarray(kpos)[None, :])
+    s = np.where(m[None, None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = np.einsum("bkgqs,bskd->bqkgd", p, np.asarray(v, np.float32))
+    return o.reshape(b, sq, h, hd)
+
+
+def _cfg(**attn_kw):
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    return dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, **attn_kw))
+
+
+def _qkv(b, s, h, kh, hd, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kh, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("kind,attn_kw", [
+    ("global", {}),
+    ("local", {"sliding_window": 8}),
+    ("local", {"sliding_window": 8, "chunked_local": True}),
+    ("global", {"attn_logit_softcap": 20.0}),
+    ("bidir", {}),
+])
+@pytest.mark.parametrize("skip", [False, True])
+def test_blockwise_matches_naive(kind, attn_kw, skip):
+    cfg = _cfg(**attn_kw)
+    b, s, h, kh, hd = 2, 32, 4, 2, 16
+    q, k, v = _qkv(b, s, h, kh, hd)
+    pos = jnp.arange(s)
+    out = A.blockwise_attention(q, k, v, pos, pos, kind=kind, cfg=cfg,
+                                block_q=8, block_kv=8,
+                                skip_masked_blocks=skip)
+    mask = A.mask_fn(kind, cfg)
+    ref = naive_attention(q, k, v, pos, pos,
+                          lambda qp, kp: np.asarray(mask(qp, kp)),
+                          softcap=cfg.attn.attn_logit_softcap)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_skip_blocks_equals_full_scan():
+    """§Perf lever correctness: bounded kv loop == full masked scan."""
+    cfg = _cfg(sliding_window=8)
+    b, s, h, kh, hd = 1, 64, 4, 2, 16
+    q, k, v = _qkv(b, s, h, kh, hd, seed=5)
+    pos = jnp.arange(s)
+    for kind in ("global", "local"):
+        full = A.blockwise_attention(q, k, v, pos, pos, kind=kind, cfg=cfg,
+                                     block_q=16, block_kv=16,
+                                     skip_masked_blocks=False)
+        skip = A.blockwise_attention(q, k, v, pos, pos, kind=kind, cfg=cfg,
+                                     block_q=16, block_kv=16,
+                                     skip_masked_blocks=True)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(skip),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ring_cache_update_and_decode():
+    cfg = _cfg(sliding_window=8)
+    b, kh, hd, clen = 2, 2, 16, 8
+    cache = A.init_kv_cache(b, clen, kh, hd, jnp.float32)
+    rng = np.random.default_rng(0)
+    # write 12 tokens through an 8-slot ring
+    ks = jnp.asarray(rng.normal(size=(12, b, 1, kh, hd)), jnp.float32)
+    vs = jnp.asarray(rng.normal(size=(12, b, 1, kh, hd)), jnp.float32)
+    for t in range(12):
+        cache = A.cache_update(cache, ks[t], vs[t],
+                               jnp.full((b,), t, jnp.int32))
+    # ring holds positions 4..11
+    pos = np.sort(np.asarray(cache["pos"][0]))
+    assert pos.tolist() == list(range(4, 12))
+    q = jnp.asarray(rng.normal(size=(b, 4, hd)), jnp.float32)
+    out = A.decode_attention(q, cache, jnp.int32(11), kind="local", cfg=cfg)
+    assert out.shape == (b, 4, hd)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_cache_fill_matches_incremental():
+    b, kh, hd, clen, s = 1, 2, 8, 16, 10
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.normal(size=(b, s, kh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kh, hd)), jnp.float32)
+    pos = jnp.arange(s)
+    bulk = A.cache_fill(A.init_kv_cache(b, clen, kh, hd, jnp.float32),
+                        k, v, pos)
+    inc = A.init_kv_cache(b, clen, kh, hd, jnp.float32)
+    for t in range(s):
+        inc = A.cache_update(inc, k[:, t:t + 1], v[:, t:t + 1],
+                             jnp.full((b,), t, jnp.int32))
+    for key in ("k", "v", "pos"):
+        np.testing.assert_array_equal(np.asarray(bulk[key]),
+                                      np.asarray(inc[key]))
+
+
+def test_rope_relative_property():
+    """RoPE: q·k depends only on relative offset."""
+    hd = 32
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+
+    def dot_at(pq, pk):
+        qq = A.apply_rope(q, jnp.array([pq]), 10000.0)
+        kk = A.apply_rope(k, jnp.array([pk]), 10000.0)
+        return float(jnp.sum(qq * kk))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)

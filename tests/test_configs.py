@@ -1,0 +1,113 @@
+"""Config system: loading, derived quantities, reduced variants."""
+import dataclasses
+
+import pytest
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, reduced_config
+
+PAPER_MODELS = ("llama3-8b", "llama3.2-3b", "openelm-1.1b")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS + PAPER_MODELS)
+def test_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+    assert cfg.n_heads % cfg.n_kv_heads == 0
+    assert cfg.param_count() > 0
+    assert cfg.lora_adapter_bytes() > 0
+
+
+def test_assigned_dims_exact():
+    """The assigned-architecture table, verbatim."""
+    expect = {
+        "mamba2-130m": (24, 768, 0, 50280),
+        "chameleon-34b": (48, 8192, 22016, 65536),
+        "qwen1.5-110b": (80, 8192, 49152, 152064),
+        "llama4-maverick-400b-a17b": (48, 5120, 8192, 202048),
+        "whisper-medium": (24, 1024, 4096, 51865),
+        "dbrx-132b": (40, 6144, 10752, 100352),
+        "gemma2-9b": (42, 3584, 14336, 256000),
+        "starcoder2-7b": (32, 4608, 18432, 49152),
+        "qwen2-0.5b": (24, 896, 4864, 151936),
+        "zamba2-2.7b": (54, 2560, 10240, 32000),
+    }
+    for arch, (nl, d, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == \
+            (nl, d, ff, v), arch
+
+
+def test_gqa_kv_heads():
+    assert get_config("chameleon-34b").n_kv_heads == 8
+    assert get_config("qwen1.5-110b").n_kv_heads == 8
+    assert get_config("starcoder2-7b").n_kv_heads == 4
+    assert get_config("qwen2-0.5b").n_kv_heads == 2
+    assert get_config("dbrx-132b").n_kv_heads == 8
+
+
+def test_moe_configs():
+    l4 = get_config("llama4-maverick-400b-a17b")
+    assert l4.moe.n_experts == 128 and l4.moe.top_k == 1
+    dbrx = get_config("dbrx-132b")
+    assert dbrx.moe.n_experts == 16 and dbrx.moe.top_k == 4
+
+
+def test_ssm_configs():
+    m2 = get_config("mamba2-130m")
+    assert m2.ssm.d_state == 128 and m2.family == "ssm"
+    z2 = get_config("zamba2-2.7b")
+    assert z2.ssm.d_state == 64 and z2.shared_attn_every == 6
+
+
+def test_param_counts_in_range():
+    """Totals should land near the name-plate sizes."""
+    approx = {
+        "mamba2-130m": 0.13e9, "chameleon-34b": 34e9, "qwen1.5-110b": 111e9,
+        "llama4-maverick-400b-a17b": 400e9, "whisper-medium": 0.8e9,
+        "dbrx-132b": 132e9, "gemma2-9b": 9.2e9, "starcoder2-7b": 7.4e9,
+        "qwen2-0.5b": 0.5e9, "zamba2-2.7b": 2.7e9,
+    }
+    for arch, n in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.7 * n <= got <= 1.3 * n, (arch, got, n)
+
+
+def test_llama4_active_params():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert cfg.active_param_count() < 20e9
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_contract(arch):
+    """Smoke configs must honor the assignment: ≤4 experts, d_model≤512,
+    small depth, same family."""
+    cfg = get_config(arch)
+    r = reduced_config(cfg)
+    assert r.d_model <= 512
+    assert r.n_layers <= 8
+    assert r.family == cfg.family
+    if r.moe is not None:
+        assert r.moe.n_experts <= 4
+    assert (r.ssm is None) == (cfg.ssm is None)
+    assert (r.encoder is None) == (cfg.encoder is None)
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+
+
+def test_long_context_applicability():
+    assert get_config("mamba2-130m").supports_long_context
+    assert get_config("zamba2-2.7b").supports_long_context
+    assert get_config("gemma2-9b").supports_long_context
+    assert get_config("starcoder2-7b").supports_long_context
+    assert get_config("llama4-maverick-400b-a17b").supports_long_context
+    assert not get_config("qwen1.5-110b").supports_long_context
+    assert not get_config("chameleon-34b").supports_long_context
+    assert not get_config("dbrx-132b").supports_long_context
+    assert not get_config("qwen2-0.5b").supports_long_context
+    assert not get_config("whisper-medium").supports_long_context

@@ -1,0 +1,73 @@
+"""Launch-layer integration: lower+compile against a small fake mesh.
+
+The production dry-run uses 512 host devices (dryrun.py sets the XLA flag
+before importing jax — which tests must NOT do). Here we exercise the same
+machinery subprocess-isolated with 8 fake devices and a reduced config, so
+the input_specs / sharding-rules / analysis pipeline is covered by CI.
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, reduced_config, INPUT_SHAPES
+from repro.configs.base import InputShape
+from repro.distributed.sharding import use_mesh
+from repro.launch.dryrun import input_specs, _arg_bytes_per_device
+from repro.launch.analysis import jaxpr_cost, parse_hlo_collectives
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+cfg = reduced_config(get_config("%(arch)s"))
+shape = InputShape("tiny_%(kind)s", %(seq)d, %(batch)d, "%(kind)s")
+
+with use_mesh(mesh):
+    fn, kwargs = input_specs(cfg, shape, mesh)
+    with mesh:
+        lowered = jax.jit(fn).lower(**kwargs)
+        compiled = lowered.compile()
+        jc = jaxpr_cost(jax.make_jaxpr(fn)(**kwargs), n_chips=8)
+        coll = parse_hlo_collectives(compiled.as_text())
+out = {
+    "flops": jc["mxu_flops"],
+    "bytes": jc["bytes"],
+    "coll": coll["total"],
+    "args_dev": _arg_bytes_per_device(kwargs, mesh),
+}
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def _run(arch: str, kind: str, seq: int, batch: int) -> dict:
+    code = SCRIPT % {"arch": arch, "kind": kind, "seq": seq, "batch": batch}
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=600,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "HOME": "/root"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    return json.loads(line[0][len("RESULT:"):])
+
+
+@pytest.mark.parametrize("arch,kind,seq,batch", [
+    ("qwen2-0.5b", "train", 64, 4),
+    ("qwen2-0.5b", "decode", 128, 8),
+    ("mamba2-130m", "decode", 128, 8),
+    ("dbrx-132b", "prefill", 64, 4),
+])
+def test_dryrun_pipeline_small_mesh(arch, kind, seq, batch):
+    out = _run(arch, kind, seq, batch)
+    assert out["flops"] > 0
+    assert out["bytes"] > 0
+    assert out["args_dev"] > 0

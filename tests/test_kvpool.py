@@ -1,0 +1,100 @@
+"""Paged KV pool: allocation invariants (hypothesis) + gather reference."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kvpool import (OutOfBlocksError, PagedKVPool, gather_kv,
+                                  write_kv)
+
+
+def test_basic_lifecycle():
+    p = PagedKVPool(n_blocks=4, block_size=8)
+    p.register(0)
+    assert p.append_tokens(0, 1) != []      # first token allocates a page
+    assert p.append_tokens(0, 7) == []      # fills page 0
+    assert len(p.append_tokens(0, 1)) == 1  # token 9 -> page 2
+    assert p.used_blocks == 2
+    p.release(0)
+    assert p.used_blocks == 0
+
+
+def test_out_of_blocks():
+    p = PagedKVPool(n_blocks=2, block_size=4)
+    p.register(0)
+    p.append_tokens(0, 8)
+    p.register(1)
+    with pytest.raises(OutOfBlocksError):
+        p.append_tokens(1, 1)
+    p.release(0)
+    p.append_tokens(1, 1)  # freed blocks are reusable
+
+
+def test_overcommit_vs_fixed():
+    """The pool's point: γ slots × max_ctx would need 8×16 blocks; with
+    short actual contexts the arena holds many more sequences."""
+    p = PagedKVPool(n_blocks=16, block_size=16)
+    for s in range(8):           # 8 sequences × 32 tokens = 16 blocks
+        p.register(s)
+        p.append_tokens(s, 32)
+    assert p.used_blocks == 16   # fully, but exactly, used
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.integers(0, 3), st.integers(1, 12)), min_size=1,
+    max_size=60))
+def test_invariants(ops):
+    """No block double-use; free+used == total; lengths consistent."""
+    p = PagedKVPool(n_blocks=24, block_size=4)
+    alive = set()
+    for seq, n in ops:
+        if seq not in alive:
+            p.register(seq)
+            alive.add(seq)
+        try:
+            p.append_tokens(seq, n)
+        except OutOfBlocksError:
+            victim = next(iter(alive))
+            p.release(victim)
+            alive.remove(victim)
+        # invariants
+        used = [b for t in p.tables.values() for b in t]
+        assert len(used) == len(set(used)), "double-booked block"
+        assert len(used) + len(p.free) == 24
+        for s in alive & set(p.tables):
+            need = -(-p.lengths[s] // 4) if p.lengths[s] else 0
+            assert len(p.tables[s]) == need
+
+
+def test_write_gather_roundtrip():
+    rng = np.random.default_rng(0)
+    p = PagedKVPool(n_blocks=8, block_size=4)
+    arena = np.zeros((8, 4, 2, 3), np.float32)  # [blocks, bs, kh, hd]
+    p.register(7)
+    ref = []
+    for pos in range(11):
+        p.append_tokens(7, 1)
+        v = rng.normal(size=(2, 3)).astype(np.float32)
+        write_kv(arena, p, 7, pos, v)
+        ref.append(v)
+    table = p.block_table(7, max_blocks=8)
+    got = gather_kv(arena, table, 11)
+    np.testing.assert_array_equal(got, np.stack(ref))
+
+
+def test_interleaved_sequences_isolated():
+    rng = np.random.default_rng(1)
+    p = PagedKVPool(n_blocks=8, block_size=4)
+    arena = np.zeros((8, 4, 1), np.float32)
+    vals = {0: [], 1: []}
+    for s in (0, 1):
+        p.register(s)
+    for i in range(12):
+        s = i % 2
+        p.append_tokens(s, 1)
+        v = rng.normal(size=(1,)).astype(np.float32)
+        write_kv(arena, p, s, len(vals[s]), v)
+        vals[s].append(v)
+    for s in (0, 1):
+        got = gather_kv(arena, p.block_table(s, 8), len(vals[s]))
+        np.testing.assert_array_equal(got, np.stack(vals[s]))

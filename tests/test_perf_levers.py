@@ -1,0 +1,145 @@
+"""§Perf levers: correctness of the switchable optimizations.
+
+Each lever must be a pure performance change — numerics identical (or
+within quantization tolerance) to the paper-faithful baseline path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.distributed import sharding as S
+from repro.models import build_model
+from repro.models import moe as moe_lib
+
+
+def test_moe_onehot_dispatch_matches_capacity():
+    """gather_threshold one-hot path == capacity scatter path exactly
+    (f32, no drops at this scale)."""
+    cfg = reduced_config(get_config("dbrx-132b"))
+    mp = moe_lib.moe_init(jax.random.PRNGKey(5), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(6), (3, 8, cfg.d_model),
+                          jnp.float32)
+    y0, aux0 = moe_lib.moe_block(mp, x, cfg)
+    cfg2 = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, gather_threshold=4096))
+    y1, aux1 = moe_lib.moe_block(mp, x, cfg2)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-5,
+                               atol=1e-5)
+    for k in aux0:
+        np.testing.assert_allclose(float(aux0[k]), float(aux1[k]),
+                                   rtol=1e-5)
+
+
+def test_moe_onehot_top2():
+    cfg = reduced_config(get_config("llama4-maverick-400b-a17b"))
+    mp = moe_lib.moe_init(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, cfg.d_model),
+                          jnp.float32)
+    y0, _ = moe_lib.moe_block(mp, x, cfg)
+    cfg2 = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, gather_threshold=4096))
+    y1, _ = moe_lib.moe_block(mp, x, cfg2)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_int8_cache_decode_accuracy():
+    """kv_cache_quant decode stays within quantization noise of fp."""
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    cfgq = dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, kv_cache_quant=True))
+    m = build_model(cfg)
+    mq = build_model(cfgq)
+    params = m.init(jax.random.PRNGKey(0))
+    b, s = 2, 24
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                          cfg.vocab_size)}
+    outs = {}
+    for model, tag in ((m, "fp"), (mq, "int8")):
+        cache = model.init_cache(b, 48)
+        lg, cache = model.prefill(params, batch, cache)
+        nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+        lg2, _ = model.decode_step(params, nxt, cache,
+                                   jnp.full((b,), s, jnp.int32))
+        outs[tag] = lg2
+    err = float(jnp.max(jnp.abs(outs["fp"].astype(jnp.float32)
+                                - outs["int8"].astype(jnp.float32))))
+    assert err < 0.15, err
+
+
+def test_int8_cache_shapes():
+    from repro.models.attention import init_kv_cache
+    c = init_kv_cache(2, 16, 4, 64, jnp.bfloat16, quant=True)
+    assert c["k"].dtype == jnp.int8
+    assert c["k_scale"].shape == (2, 16, 4)
+
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+def test_replicate_below_strips_fsdp_only():
+    rules = dict(S.LOGICAL_RULES)
+    rules["replicate_below"] = 64e6
+    # small weight (below threshold): fsdp dropped, tensor axis kept
+    spec = S._leaf_spec("layers/slot0/attn/wq", (24, 896, 896), FakeMesh(),
+                        rules, itemsize=2)
+    from jax.sharding import PartitionSpec as P
+    assert spec == P(None, None, "model")
+    # large weight: both axes kept
+    spec = S._leaf_spec("layers/slot0/attn/wq", (80, 8192, 8192),
+                        FakeMesh(), rules, itemsize=2)
+    assert spec == P(None, "data", "model")
+
+
+def test_kv_seq_rule_switch():
+    from jax.sharding import PartitionSpec as P
+    rules = dict(S.LOGICAL_RULES)
+    # default: kv_seq disabled -> head_dim fallback shards the last dim
+    spec = S._leaf_spec("cache/slot0/k", (24, 128, 4096, 8, 64),
+                        FakeMesh(), rules)
+    assert spec == P(None, "data", None, None, "model")
+    # enabled: sequence dim takes the model axis, head_dim backs off
+    rules["kv_seq"] = "model"
+    spec = S._leaf_spec("cache/slot0/k", (24, 128, 4096, 8, 64),
+                        FakeMesh(), rules)
+    assert spec == P(None, "data", "model", None, None)
+
+
+def test_lora_pool_sharding_rules():
+    from jax.sharding import PartitionSpec as P
+    rules = S.LOGICAL_RULES
+    # A: d_in on the model axis (local shrink partial-sum)
+    spec = S._leaf_spec("pool/layers/slot0/q/A", (24, 8, 16, 896),
+                        FakeMesh(), rules)
+    assert spec == P(None, None, None, "model")
+    # B for q: output dim rides head sharding
+    spec = S._leaf_spec("pool/layers/slot0/q/B", (24, 8, 896, 16),
+                        FakeMesh(), rules)
+    assert spec == P(None, None, "model", None)
+    # B for o/down: replicated
+    spec = S._leaf_spec("pool/layers/slot0/down/B", (24, 8, 896, 16),
+                        FakeMesh(), rules)
+    assert spec == P(None, None, None, None)
+
+
+def test_engine_with_int8_cache():
+    """End-to-end serve with the quantized cache (beyond-paper default
+    candidate; llama.cpp-parity Q8_0)."""
+    from repro.serving.engine import EdgeLoRAEngine, EngineConfig
+    from repro.serving.workload import WorkloadConfig, generate_trace
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    cfg = dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, kv_cache_quant=True),
+        lora=dataclasses.replace(cfg.lora, n_adapters=8))
+    eng = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=2, max_ctx=64, prompt_buckets=(16, 32)))
+    trace = generate_trace(WorkloadConfig(
+        n_adapters=8, request_rate=4.0, duration=2.0, input_range=(4, 16),
+        output_range=(4, 8), vocab_size=cfg.vocab_size))
+    summ = eng.serve(trace)
+    assert summ.n_completed == summ.n_requests

@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+For every assigned architecture: instantiate the REDUCED same-family
+variant, run one forward pass and one LoRA train step on CPU, assert
+output shapes and absence of NaNs; and check the prefill+decode path
+agrees with the teacher-forced forward (continuous-batching correctness).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.core.lora import LoRAMode
+from repro.models import build_model
+from repro.training.data import DataConfig, lm_batches
+from repro.training.train import init_train_state, make_train_step
+
+
+def _batch(cfg, model, b=2, s=32, seed=1):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(seed),
+                                          (b, s), 0, cfg.vocab_size)}
+    if cfg.encoder is not None:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1),
+            (b, cfg.encoder.n_frames, cfg.d_model), model.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nan(arch):
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, model)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), arch
+    for v in aux.values():
+        assert not bool(jnp.isnan(v).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, total_steps=10))
+    batch = _batch(cfg, model, s=33)
+    state, metrics = step(state, batch)
+    assert not bool(jnp.isnan(metrics["loss"])), arch
+    assert float(metrics["grad_norm"]) > 0, (
+        f"{arch}: LoRA grads must be nonzero")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 32
+    batch = _batch(cfg, model, b, s)
+    cache = model.init_cache(b, 64)
+    lg_pre, cache = model.prefill(params, batch, cache)
+    nxt = jnp.argmax(lg_pre, -1).astype(jnp.int32)
+    lg_dec, cache = model.decode_step(params, nxt, cache,
+                                      jnp.full((b,), s, jnp.int32))
+    toks2 = jnp.concatenate([batch["tokens"], nxt[:, None]], 1)
+    lg_full, _ = model.forward(params, dict(batch, tokens=toks2))
+    err_pre = jnp.max(jnp.abs(lg_pre.astype(jnp.float32)
+                              - lg_full[:, s - 1].astype(jnp.float32)))
+    err_dec = jnp.max(jnp.abs(lg_dec.astype(jnp.float32)
+                              - lg_full[:, s].astype(jnp.float32)))
+    assert float(err_pre) < 0.15, (arch, float(err_pre))
+    assert float(err_dec) < 0.15, (arch, float(err_dec))
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-130m",
+                                  "zamba2-2.7b", "dbrx-132b"])
+def test_batched_lora_forward(arch):
+    """Batch LoRA Inference: per-request adapters == per-request runs."""
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pool = model.init_lora(jax.random.PRNGKey(1), n_slots=4)
+    # randomize B (zero-init would make adapters no-ops)
+    pool = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(2), x.shape,
+                                    x.dtype) * 0.05, pool)
+    batch = _batch(cfg, model, b=3, s=16)
+    ids = jnp.array([0, 2, 1], jnp.int32)
+    mode = LoRAMode("batched", ids, cfg.lora.scale)
+    out, _ = model.forward(params, batch, pool, mode)
+    # reference: run each request alone with its adapter slot
+    for i in range(3):
+        bi = {k: v[i:i + 1] for k, v in batch.items()}
+        mode1 = LoRAMode("batched", ids[i:i + 1], cfg.lora.scale)
+        ref, _ = model.forward(params, bi, pool, mode1)
+        diff = jnp.abs(out[i:i + 1].astype(jnp.float32)
+                       - ref.astype(jnp.float32))
+        if cfg.moe is not None and cfg.moe.top_k > 1:
+            # top-k>1 MoE: bf16 batch-shape numerics can flip near-tied
+            # expert choices for isolated tokens; require the bulk of
+            # logits to agree instead of a strict max bound
+            frac_bad = float(jnp.mean(diff > 0.15))
+            assert frac_bad < 0.01, (arch, i, frac_bad)
+        else:
+            assert float(jnp.max(diff)) < 0.15, (arch, i,
+                                                 float(jnp.max(diff)))

@@ -1,0 +1,50 @@
+"""Synthetic workload generator (paper §5.1) statistics."""
+import numpy as np
+
+from repro.serving.workload import WorkloadConfig, adapter_popularity, generate_trace
+
+
+def test_rate():
+    cfg = WorkloadConfig(request_rate=5.0, duration=200.0, seed=1)
+    trace = generate_trace(cfg)
+    assert abs(len(trace) / 200.0 - 5.0) < 0.8
+
+
+def test_power_law_locality():
+    """Lower α ⇒ more mass on the top adapter."""
+    p_low = adapter_popularity(50, alpha=0.5)
+    p_high = adapter_popularity(50, alpha=2.0)
+    assert p_high[0] > p_low[0]
+    assert np.isclose(p_low.sum(), 1.0) and np.isclose(p_high.sum(), 1.0)
+
+
+def test_top_decile_dominates_at_alpha1():
+    """The paper's long-tail premise: few adapters get most traffic."""
+    cfg = WorkloadConfig(n_adapters=100, alpha=1.2, request_rate=50,
+                         duration=100, seed=0)
+    trace = generate_trace(cfg)
+    counts = np.bincount([r.true_adapter for r in trace], minlength=100)
+    top10 = np.sort(counts)[::-1][:10].sum()
+    assert top10 / counts.sum() > 0.5
+
+
+def test_burstiness_cv():
+    base = dict(request_rate=10.0, duration=300.0, seed=3)
+    t1 = generate_trace(WorkloadConfig(cv=1.0, **base))
+    t2 = generate_trace(WorkloadConfig(cv=2.5, **base))
+
+    def cv_of(trace):
+        at = np.array([r.arrival_time for r in trace])
+        gaps = np.diff(at)
+        return gaps.std() / gaps.mean()
+
+    assert cv_of(t2) > cv_of(t1) * 1.3
+
+
+def test_lengths_in_bounds():
+    cfg = WorkloadConfig(input_range=(8, 64), output_range=(4, 32),
+                         request_rate=20, duration=20, seed=5)
+    for r in generate_trace(cfg):
+        assert 8 <= r.prompt_len <= 64
+        assert 4 <= r.output_len <= 32
+        assert r.prompt_tokens.shape == (r.prompt_len,)
