@@ -7,8 +7,12 @@ Three ways to serve a heterogeneous-adapter batch through one linear:
 * ``batched``     — the paper's batched gather-einsum (one fused pass)
 * ``merged``      — merge/unmerge weights per unique adapter (Fig. 2b swap)
 
-Plus the SGMV kernel-vs-oracle numeric check (interpret mode measures
-correctness, not speed — the kernel's perf story lives in the roofline).
+Plus the backend comparison the serving engine actually switches on
+(``lora_backend``): the gather-einsum path vs the Pallas SGMV data path
+(grouping plan + grouped GEMMs + scatter), checked numerically over
+mixed-adapter batches with ragged token counts, and the SGMV
+kernel-vs-oracle check (interpret mode measures correctness, not speed —
+the kernel's perf story lives in the roofline).
 """
 from __future__ import annotations
 
@@ -67,6 +71,47 @@ def fig6_batched_vs_sequential() -> None:
     err = max(float(jnp.max(jnp.abs(yb - ys))),
               float(jnp.max(jnp.abs(yb - ym))))
     emit("fig6/consistency", 0.0, f"max_err={err:.2e}")
+
+
+def backend_einsum_vs_sgmv() -> None:
+    """The engine's ``lora_backend`` knob at the layer level: einsum vs
+    the full SGMV data path on serving-shaped [B, S, d] batches.
+
+    Token counts are deliberately NOT multiples of the kernel block size
+    (B·S = 21·? rows) so the grouping plan's per-adapter padding is
+    exercised; allclose is asserted, timings emitted for both backends.
+    """
+    rng = np.random.default_rng(3)
+    n = 8
+    cases = [
+        ("prefill", (7, 3, 256)),    # 21 tokens: ragged vs any blk_t
+        ("decode", (6, 256)),        # [B, d] decode step shape
+    ]
+    a_stack = jnp.asarray(rng.normal(size=(n, 16, 256)), jnp.float32)
+    b_stack = jnp.asarray(rng.normal(size=(n, 256, 16)), jnp.float32)
+    for tag, shape in cases:
+        x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, n, shape[0]), jnp.int32)
+
+        @jax.jit
+        def einsum_fn(x, a, b, ids):
+            return lora.lora_delta_batched(x, a, b, ids, 0.5)
+
+        @jax.jit
+        def sgmv_fn(x, a, b, ids):
+            return lora.lora_delta_batched(x, a, b, ids, 0.5,
+                                           backend="sgmv", interpret=True)
+
+        y_e = einsum_fn(x, a_stack, b_stack, ids)
+        y_k = sgmv_fn(x, a_stack, b_stack, ids)
+        err = float(jnp.max(jnp.abs(y_e - y_k)))
+        assert err < 1e-3, (tag, err)
+        t_e = time_fn(einsum_fn, x, a_stack, b_stack, ids)
+        t_k = time_fn(sgmv_fn, x, a_stack, b_stack, ids)
+        emit(f"lora_backend/{tag}/einsum", t_e, "engine CPU default")
+        emit(f"lora_backend/{tag}/sgmv", t_k,
+             f"max_err={err:.2e} sgmv_vs_einsum={t_e / t_k:.2f}x "
+             f"(interpret mode: correctness, not TPU speed)")
 
 
 def sgmv_kernel_check() -> None:

@@ -26,6 +26,7 @@ def main() -> None:
     serving_tables.table6_learned_router_overhead()
     # batched LoRA micro + kernels
     batched_lora_micro.fig6_batched_vs_sequential()
+    batched_lora_micro.backend_einsum_vs_sgmv()
     batched_lora_micro.sgmv_kernel_check()
     batched_lora_micro.flash_decode_check()
     # router quality

@@ -153,6 +153,11 @@ class ModelConfig:
     shared_attn_every: int = 0
 
     lora: LoRAConfig = field(default_factory=LoRAConfig)
+    # Batched-LoRA compute path: 'sgmv' (grouped Pallas kernels, the TPU
+    # serving default), 'einsum' (gather-einsum reference, the CPU/ref
+    # fallback), or 'auto' (sgmv on TPU, einsum elsewhere). Resolved by
+    # ``repro.core.lora.resolve_lora_backend`` at engine/launch init.
+    lora_backend: str = "auto"
 
     dtype: str = "bfloat16"
 

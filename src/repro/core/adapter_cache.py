@@ -38,6 +38,12 @@ class CacheStats:
         return self.hits / total if total else 0.0
 
 
+class PoolExhaustedError(RuntimeError):
+    """Every resident adapter is pinned by an in-flight request — no pool
+    block can be evicted. Callers (the engine) defer and retry; kept a
+    RuntimeError subclass for backwards compatibility."""
+
+
 class AdapterMemoryManager:
     """LRU cache over a fixed pool of adapter slots.
 
@@ -79,6 +85,8 @@ class AdapterMemoryManager:
         self.pinned[adapter_id] += 1
 
     def unpin(self, adapter_id: int) -> None:
+        if adapter_id not in self.pinned:
+            return  # unmatched unpin must not underflow into a negative pin
         self.pinned[adapter_id] -= 1
         if self.pinned[adapter_id] <= 0:
             del self.pinned[adapter_id]
@@ -89,21 +97,23 @@ class AdapterMemoryManager:
         """Ensure ``adapter_id`` is resident; returns (slot, loaded:bool).
 
         loaded=True means a swap-in happened (the caller charges the load
-        latency). Raises RuntimeError when every block is pinned.
+        latency). Raises PoolExhaustedError when every block is pinned.
         """
         if adapter_id in self.resident:
             self.stats.hits += 1
             self._touch(adapter_id)
             return self.resident[adapter_id], False
-        self.stats.misses += 1
         if not self.free_slots:
             victim = self._pick_victim()
             if victim is None:
-                raise RuntimeError(
+                # no miss counted: the engine defers and retries, and a
+                # retry storm must not skew the hit-rate stats
+                raise PoolExhaustedError(
                     "adapter pool exhausted: all resident adapters pinned")
             slot = self.resident.pop(victim)
             self.free_slots.append(slot)
             self.stats.evictions += 1
+        self.stats.misses += 1
         slot = self.free_slots.pop()
         self.load_fn(adapter_id, slot)
         self.stats.loads += 1

@@ -32,11 +32,43 @@ class LoRAMode(NamedTuple):
     kind: 'none' | 'single' | 'batched'
     adapter_ids: [batch] int32 slot indices (batched mode only).
     scale: alpha / rank.
+    backend: 'einsum' (gather-einsum reference, the CPU fallback) or
+        'sgmv' (grouped Pallas kernels, the TPU serving path) — batched
+        mode only. See ``resolve_lora_backend`` for the 'auto' policy.
+    interpret: run the sgmv Pallas kernels in interpret mode (required
+        off-TPU; ignored by the einsum backend).
+
+    Note: construct LoRAMode *inside* jit'd functions (string fields are
+    not valid jit argument leaves); every model entry point does so.
     """
 
     kind: str = "none"
     adapter_ids: Optional[jax.Array] = None
     scale: float = 1.0
+    backend: str = "einsum"
+    interpret: bool = True
+
+
+def resolve_lora_backend(requested: str = "auto") -> str:
+    """Map the ModelConfig/EngineConfig knob to a concrete backend.
+
+    'auto' selects the Pallas SGMV kernels on TPU and the gather-einsum
+    path everywhere else (interpret-mode Pallas is correct but slow, so
+    CPU runs keep einsum unless a test explicitly opts in to 'sgmv').
+    """
+    if requested == "auto":
+        return "sgmv" if jax.default_backend() == "tpu" else "einsum"
+    if requested not in ("einsum", "sgmv"):
+        raise ValueError(f"unknown lora backend {requested!r}")
+    return requested
+
+
+def resolve_lora_exec(requested: str = "auto") -> Tuple[str, bool]:
+    """(backend, interpret) for this process — the single source of the
+    execution policy shared by the serving engine and the launch layer:
+    Pallas kernels run compiled on TPU, interpret mode everywhere else.
+    """
+    return resolve_lora_backend(requested), jax.default_backend() != "tpu"
 
 
 def init_lora_pair(rng: jax.Array, d_in: int, d_out: int, rank: int,
@@ -64,17 +96,24 @@ def lora_delta_single(x: jax.Array, a: jax.Array, b: jax.Array,
 
 
 def lora_delta_batched(x: jax.Array, a_stack: jax.Array, b_stack: jax.Array,
-                       adapter_ids: jax.Array, scale: float) -> jax.Array:
+                       adapter_ids: jax.Array, scale: float,
+                       backend: str = "einsum",
+                       interpret: bool = True) -> jax.Array:
     """Batch LoRA Inference: per-request adapters from the stacked pool.
 
     x: [B, S, d_in] (or [B, d_in]); A_stack: [R, r, d_in];
     B_stack: [R, d_out, r]; adapter_ids: [B] int32 slots.
 
-    The gather materializes only the per-request adapters ([B, r, d_in]),
-    never the whole pool against the whole batch. On the TPU serving path
-    the same contraction runs through the Pallas SGMV kernel
-    (``repro.kernels.ops.sgmv``) over adapter-homogeneous token blocks.
+    backend='einsum': gather-einsum — materializes only the per-request
+    adapters ([B, r, d_in]), never the whole pool against the whole batch.
+    backend='sgmv': the token batch is flattened to [T, d_in] with
+    per-token slot ids and routed through the Pallas SGMV data path
+    (``repro.kernels.ops.sgmv``: grouping plan + grouped shrink/expand
+    GEMMs + scatter) so every MXU block is adapter-homogeneous.
     """
+    if backend == "sgmv":
+        return _lora_delta_sgmv(x, a_stack, b_stack, adapter_ids, scale,
+                                interpret)
     a_sel = a_stack[adapter_ids].astype(x.dtype)  # [B, r, d_in]
     b_sel = b_stack[adapter_ids].astype(x.dtype)  # [B, d_out, r]
     if x.ndim == 3:
@@ -82,6 +121,31 @@ def lora_delta_batched(x: jax.Array, a_stack: jax.Array, b_stack: jax.Array,
         return scale * jnp.einsum("bsr,bor->bso", shrink, b_sel)
     shrink = jnp.einsum("bd,brd->br", x, a_sel)
     return scale * jnp.einsum("br,bor->bo", shrink, b_sel)
+
+
+def _lora_delta_sgmv(x: jax.Array, a_stack: jax.Array, b_stack: jax.Array,
+                     adapter_ids: jax.Array, scale: float,
+                     interpret: bool) -> jax.Array:
+    """Flatten [B, S, d]→[T, d] with per-token slots, run ops.sgmv,
+    reshape back. Token counts need not be multiples of the kernel block
+    size — the grouping plan pads each adapter's run internally."""
+    from repro.kernels import ops  # deferred: keep core importable w/o pallas
+
+    adapter_ids = jnp.asarray(adapter_ids, jnp.int32)
+    if x.ndim == 3:
+        b, s, d_in = x.shape
+        token_slots = jnp.repeat(adapter_ids, s, total_repeat_length=b * s)
+        flat = x.reshape(b * s, d_in)
+    else:
+        token_slots = adapter_ids
+        flat = x
+    # match the einsum backend's semantics (adapters computed at x.dtype);
+    # also keeps the kernel dot_generals single-dtype (f32 pool, bf16 x)
+    delta = ops.sgmv(flat, a_stack.astype(x.dtype),
+                     b_stack.astype(x.dtype), token_slots, scale,
+                     n_slots=a_stack.shape[0], blk_t=None,
+                     interpret=interpret)
+    return delta.reshape(*x.shape[:-1], b_stack.shape[1])
 
 
 def apply_lora(x: jax.Array, pair: Optional[Dict[str, jax.Array]],
@@ -98,7 +162,9 @@ def apply_lora(x: jax.Array, pair: Optional[Dict[str, jax.Array]],
         return lora_delta_single(x, pair["A"], pair["B"], mode.scale)
     if mode.kind == "batched":
         return lora_delta_batched(x, pair["A"], pair["B"],
-                                  mode.adapter_ids, mode.scale)
+                                  mode.adapter_ids, mode.scale,
+                                  backend=mode.backend,
+                                  interpret=mode.interpret)
     raise ValueError(f"unknown LoRA mode {mode.kind!r}")
 
 

@@ -40,6 +40,9 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     generated: int = 0
+    # generated token ids, in order (observable output: regression tests
+    # compare these across engine configurations)
+    tokens: List[int] = field(default_factory=list)
 
 
 @dataclass
@@ -50,18 +53,23 @@ class Slot:
     pos: int = 0                 # next token position
     adapter_slot: int = 0        # pool slot of the active adapter
     last_token: int = 0
+    # router scores cached across SELECTING retries (pool-exhausted
+    # deferral must not re-score the request)
+    sel_scores: Optional[object] = None
 
     def assign(self, req: Request) -> None:
         assert self.state == SlotState.IDLE
         self.request = req
         self.state = SlotState.SELECTING
         self.pos = 0
+        self.sel_scores = None
 
     def release(self) -> Request:
         req = self.request
         self.request = None
         self.state = SlotState.IDLE
         self.pos = 0
+        self.sel_scores = None
         return req
 
 

@@ -109,6 +109,8 @@ def _resolve(mesh: Mesh, rules: Dict[str, Any], logical: Optional[str],
                 if s and dim % s == 0:
                     return sub if len(sub) > 1 else sub[0]
         return None
+    if isinstance(phys, tuple) and len(phys) == 1:
+        return phys[0]  # ('data',) and 'data' shard identically; normalize
     return phys
 
 

@@ -20,6 +20,19 @@ from repro.kernels.decode_attention import flash_decode
 from repro.kernels.sgmv import DEFAULT_BLK_T, sgmv_expand, sgmv_shrink
 
 
+def auto_blk_t(t: int, n_slots: int, requested: int = DEFAULT_BLK_T) -> int:
+    """Token-block size for a T-token, R-slot sgmv problem.
+
+    Padded work is (ceil(T/blk_t) + R) · blk_t rows, so decode-sized
+    batches (T ≈ R) want small blocks while prefill wants the full
+    MXU-aligned 128. Target the per-slot run length, clamped to
+    [8, requested] and rounded up to a power of two (sublane-aligned).
+    """
+    per_slot = max(8, -(-t // max(1, n_slots)))
+    blk = 1 << (per_slot - 1).bit_length()
+    return max(8, min(requested, blk))
+
+
 class Grouping(NamedTuple):
     """Static-shaped u-batch layout for a batch of per-token adapter slots."""
 
@@ -70,20 +83,24 @@ def plan_grouping(token_slots: jax.Array, n_slots: int,
                                              "interpret", "use_kernel"))
 def sgmv(x: jax.Array, a_stack: jax.Array, b_stack: jax.Array,
          token_slots: jax.Array, scale: float, *, n_slots: int,
-         blk_t: int = DEFAULT_BLK_T, blk_d: int = 512,
+         blk_t: Optional[int] = DEFAULT_BLK_T, blk_d: int = 512,
          interpret: bool = True, use_kernel: bool = True) -> jax.Array:
     """Grouped LoRA delta for a heterogeneous-adapter batch.
 
     x: [T, d_in]; a_stack: [R, r, d_in]; b_stack: [R, d_out, r];
     token_slots: [T] int32 in [0, R). Returns [T, d_out] = scale·B_s(A_s x).
 
-    use_kernel=False falls back to the ref gather-einsum (the baseline the
-    benchmarks compare against).
+    blk_t=None picks a block size from (T, R) via ``auto_blk_t`` — the
+    batched-LoRA layers use this so decode steps (T = a few slots) don't
+    pay 128-row padding per adapter. use_kernel=False falls back to the
+    ref gather-einsum (the baseline the benchmarks compare against).
     """
     if not use_kernel:
         return (scale * ref.sgmv_ref(x, a_stack, b_stack, token_slots, 1.0)
                 ).astype(x.dtype)
     t, d_in = x.shape
+    if blk_t is None:
+        blk_t = auto_blk_t(t, n_slots)
     plan = plan_grouping(token_slots, n_slots, blk_t)
     # gather into padded u-batch layout (the paper's Fig. 6 gather)
     xbuf = jnp.zeros((plan.n_padded, d_in), x.dtype)

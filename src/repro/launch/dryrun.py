@@ -37,7 +37,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.configs.base import InputShape, ModelConfig
-from repro.core.lora import LoRAMode
+from repro.core.lora import LoRAMode, resolve_lora_exec
 from repro.distributed.sharding import param_specs, use_mesh
 from repro.launch.analysis import jaxpr_cost, parse_hlo_collectives
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
@@ -62,7 +62,11 @@ def _sds(tree: Any, mesh, rules=None) -> Any:
         tree, specs)
 
 
-def _sds_simple(shape, dtype, mesh, spec: P) -> jax.ShapeDtypeStruct:
+def _sds_simple(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    # call sites build specs via `bspec + P(...)`, which tuple-concats to a
+    # plain tuple; NamedSharding requires a PartitionSpec, so re-wrap
+    if not isinstance(spec, P):
+        spec = P(*spec)
     return jax.ShapeDtypeStruct(shape, dtype,
                                 sharding=NamedSharding(mesh, spec))
 
@@ -112,6 +116,9 @@ def input_specs(cfg: ModelConfig, shape: InputShape, mesh,
         jax.random.PRNGKey(0))
     pool_sds = _sds(pool_shapes, mesh)
     scale = cfg.lora.scale
+    # dry-run lowers on host devices, so 'auto' resolves to einsum; an
+    # explicit cfg.lora_backend='sgmv' compiles the interpret-mode kernels
+    lora_backend, sgmv_interpret = resolve_lora_exec(cfg.lora_backend)
 
     if shape.kind == "prefill":
         cache_shapes = jax.eval_shape(
@@ -128,7 +135,8 @@ def input_specs(cfg: ModelConfig, shape: InputShape, mesh,
         fwd_opts = opts
 
         def prefill_step(params, pool, batch, cache, slot_ids):
-            mode = LoRAMode("batched", slot_ids, scale)
+            mode = LoRAMode("batched", slot_ids, scale, lora_backend,
+                            sgmv_interpret)
             logits, cache = model.prefill(params, batch, cache, pool, mode,
                                           fwd_opts)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
@@ -146,7 +154,8 @@ def input_specs(cfg: ModelConfig, shape: InputShape, mesh,
     slot_ids = _sds_simple((shape.global_batch,), jnp.int32, mesh, bspec)
 
     def serve_step(params, pool, tokens, cache, pos, slot_ids):
-        mode = LoRAMode("batched", slot_ids, scale)
+        mode = LoRAMode("batched", slot_ids, scale, lora_backend,
+                        sgmv_interpret)
         logits, cache = model.decode_step(params, tokens, cache, pos, pool,
                                           mode)
         return jnp.argmax(logits, -1).astype(jnp.int32), cache

@@ -37,6 +37,10 @@ def main(argv=None) -> int:
     ap.add_argument("--max-ctx", type=int, default=256)
     ap.add_argument("--memory-budget", type=float, default=2e9)
     ap.add_argument("--cache-policy", default="lru", choices=["lru", "lfu"])
+    ap.add_argument("--lora-backend", default=None,
+                    choices=["auto", "einsum", "sgmv"],
+                    help="batched-LoRA compute path (default: the model "
+                         "config's 'auto' — sgmv on TPU, einsum elsewhere)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
@@ -59,13 +63,14 @@ def main(argv=None) -> int:
         n_slots=args.n_slots, top_k=args.top_k, policy=args.policy,
         max_ctx=args.max_ctx, prompt_buckets=(32, 64),
         memory_budget=args.memory_budget, cache_policy=args.cache_policy,
-        seed=args.seed)
+        lora_backend=args.lora_backend, seed=args.seed)
     try:
         engine = EdgeLoRAEngine(cfg, ecfg)
     except OutOfMemoryError as e:
         print(f"OOM: {e}")
         return 2
     summary = engine.serve(trace)
+    print(f"# lora_backend={engine.lora_backend}", file=sys.stderr)
     if args.json:
         print(json.dumps(summary.__dict__, default=float, indent=2))
     else:

@@ -130,10 +130,13 @@ def moe_block(params: Dict, x: jax.Array, cfg: ModelConfig,
         y = jnp.einsum("tec,ecd->td", disp * gates[:, None, None], hout)
         y = (y.reshape(t, k, d).sum(1) if k > 1
              else y.reshape(t, d)).astype(x.dtype)
-        if "shared" in params:
-            y = y + mlp(params["shared"], xf, act=cfg.act, glu=cfg.glu,
-                        lora=lora, lora_mode=lora_mode)
         y = y.reshape(b, s, d)
+        if "shared" in params:
+            # shared expert sees the un-flattened [B, S, d] batch so the
+            # per-request adapter_ids in batched LoRA mode line up with
+            # the batch dim (xf's [B·S, d] layout would not)
+            y = y + mlp(params["shared"], x, act=cfg.act, glu=cfg.glu,
+                        lora=lora, lora_mode=lora_mode)
         return logical_constraint(y, "batch", None, None), aux
 
     # ---- dispatch: position of each (token, choice) in its expert queue ----
@@ -159,9 +162,10 @@ def moe_block(params: Dict, x: jax.Array, cfg: ModelConfig,
     out_tok = jnp.where(keep[:, None], out_tok, 0)
     gates = gate_vals.reshape(t * k)
     y = (out_tok * gates[:, None].astype(out_tok.dtype)).reshape(t, k, d).sum(1)
+    y = y.reshape(b, s, d)
 
     if "shared" in params:
-        y = y + mlp(params["shared"], xf, act=cfg.act, glu=cfg.glu,
+        # see the decode-scale path above: shared expert on [B, S, d]
+        y = y + mlp(params["shared"], x, act=cfg.act, glu=cfg.glu,
                     lora=lora, lora_mode=lora_mode)
-    y = y.reshape(b, s, d)
     return logical_constraint(y, "batch", None, None), aux

@@ -10,9 +10,24 @@ flowing into ``LoRAMode('batched', ...)``.
 
 Timing model: the engine advances a virtual clock by *measured* wall-times
 of the jit'd steps (each unique shape warmed at init, so compile never
-pollutes the timeline). Adapter swap-ins charge ``adapter_bytes /
-disk_bandwidth`` and llama.cpp-style merge switches charge a
-merge/unmerge byte cost — both documented simulation knobs (DESIGN.md §8).
+pollutes the timeline). Two simulation cost-model knobs cover the traffic
+that compute steps don't measure (DESIGN.md §8):
+
+* ``disk_bandwidth`` (bytes/s) — adapter swap-in: every pool miss charges
+  ``adapter_bytes / disk_bandwidth`` sim-seconds (the paper's disk→RAM
+  swap; host→HBM here).
+* ``mem_bandwidth`` (bytes/s) — weight-sized merge/unmerge traffic: the
+  llamacpp and dlora-merged policies charge ``2 · adapter_bytes /
+  mem_bandwidth`` per merge and per unmerge (read + write of the touched
+  weight rows).
+
+Batched-LoRA compute backend: ``EngineConfig.lora_backend`` ('auto' by
+default, falling back to ``ModelConfig.lora_backend``) selects how the
+batched prefill/decode steps compute the per-request LoRA delta —
+'sgmv' routes through the grouped Pallas kernels (``kernels/ops.py``,
+the TPU serving path; interpret mode off-TPU), 'einsum' through the
+gather-einsum reference (the CPU default). Numerics agree across
+backends; ``benchmarks/batched_lora_micro.py`` reports the deltas.
 
 Scheduler policies:
 
@@ -37,8 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.adapter_cache import AdapterMemoryManager
-from repro.core.lora import LoRAMode
+from repro.core.adapter_cache import AdapterMemoryManager, PoolExhaustedError
+from repro.core.lora import LoRAMode, resolve_lora_exec
 from repro.core.router import OracleRouter, select_adapter
 from repro.core.slots import Request, Slot, SlotManager, SlotState
 from repro.models import build_model
@@ -56,7 +71,12 @@ class EngineConfig:
     top_k: int = 3                   # k (Algorithm 1)
     policy: str = "edgelora"         # edgelora | edgelora_no_aas | llamacpp
     max_ctx: int = 512               # KV capacity per slot
+    # prompt padding buckets; normalized at engine init so the largest
+    # bucket always covers max_ctx (no silent prompt truncation)
     prompt_buckets: Tuple[int, ...] = (32, 64, 128, 256)
+    # batched-LoRA backend: 'einsum' | 'sgmv' | 'auto' | None
+    # (None defers to ModelConfig.lora_backend; 'auto' → sgmv on TPU)
+    lora_backend: Optional[str] = None
     disk_bandwidth: float = 1.0e9    # adapter swap-in bytes/s (host->HBM)
     mem_bandwidth: float = 60.0e9    # merge/unmerge traffic (llama.cpp mode)
     memory_budget: float = 6.0e9     # adapter memory budget (llamacpp preload)
@@ -76,6 +96,14 @@ class EdgeLoRAEngine:
                  router=None, params=None):
         self.cfg = cfg
         self.ecfg = engine_cfg
+        # concrete batched-LoRA backend for this process ('einsum'|'sgmv')
+        self.lora_backend, self._sgmv_interpret = resolve_lora_exec(
+            engine_cfg.lora_backend or cfg.lora_backend)
+        # buckets cover max_ctx so no prompt that fits the KV capacity is
+        # ever silently truncated by _padded_prompt
+        self._buckets = tuple(sorted(
+            {min(b, engine_cfg.max_ctx) for b in engine_cfg.prompt_buckets
+             if b > 0} | {engine_cfg.max_ctx}))
         self.model = build_model(cfg)
         rng = jax.random.PRNGKey(engine_cfg.seed)
         self.params = params if params is not None else self.model.init(rng)
@@ -138,16 +166,17 @@ class EdgeLoRAEngine:
     def _build_steps(self):
         model, cfg = self.model, self.cfg
         scale = cfg.lora.scale
+        backend, interpret = self.lora_backend, self._sgmv_interpret
 
         def prefill_fn(params, pool, tokens, cache1, slot_id, length):
-            mode = LoRAMode("batched", slot_id, scale)
+            mode = LoRAMode("batched", slot_id, scale, backend, interpret)
             logits, cache1 = model.prefill(params, {"tokens": tokens},
                                            cache1, pool, mode,
                                            lengths=length)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache1
 
         def decode_fn(params, pool, tokens, cache, pos, slot_ids):
-            mode = LoRAMode("batched", slot_ids, scale)
+            mode = LoRAMode("batched", slot_ids, scale, backend, interpret)
             logits, cache = model.decode_step(params, tokens, cache, pos,
                                               pool, mode)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
@@ -181,10 +210,16 @@ class EdgeLoRAEngine:
         self._cache1_template = self.model.init_cache(1, self.ecfg.max_ctx)
 
     def _bucket(self, n: int) -> int:
-        for b in self.ecfg.prompt_buckets:
+        for b in self._buckets:
             if n <= b:
                 return b
-        return self.ecfg.prompt_buckets[-1]
+        # unreachable for admitted requests (serve() validates prompt_len
+        # <= max_ctx and the largest bucket == max_ctx); never clamp —
+        # clamping truncated the prompt while slot.pos advanced past it,
+        # leaving decode attending to KV positions that were never written
+        raise ValueError(
+            f"prompt length {n} exceeds the largest bucket "
+            f"{self._buckets[-1]} (max_ctx={self.ecfg.max_ctx})")
 
     def _timed(self, key, fn, *args):
         """Run fn; charge its measured duration (first call per key warms
@@ -213,6 +248,12 @@ class EdgeLoRAEngine:
     def serve(self, trace: List[Request],
               max_sim_time: Optional[float] = None) -> ServingSummary:
         ecfg = self.ecfg
+        for r in trace:
+            if r.prompt_len > ecfg.max_ctx:
+                raise ValueError(
+                    f"request {r.request_id}: prompt_len {r.prompt_len} "
+                    f"exceeds max_ctx {ecfg.max_ctx}; truncate the prompt "
+                    f"explicitly or raise max_ctx")
         now = 0.0
         queue = sorted(trace, key=lambda r: r.arrival_time)
         qi = 0
@@ -290,8 +331,11 @@ class EdgeLoRAEngine:
                     req.selected_adapter = req.true_adapter
                     slot.merged = dlora_mode == "merged"
                     if not slot.merged:
-                        pool_slot, _ = self.manager.acquire(
-                            req.selected_adapter)
+                        try:
+                            pool_slot, _ = self.manager.acquire(
+                                req.selected_adapter)
+                        except PoolExhaustedError:
+                            continue  # pool fully pinned: defer (see below)
                         self.manager.pin(req.selected_adapter)
                         now += self._pending_load_cost
                         self._pending_load_cost = 0.0
@@ -303,34 +347,61 @@ class EdgeLoRAEngine:
                     continue
                 slot.merged = False
                 if ecfg.policy == "llamacpp":
+                    # baseline executes MERGED: the active adapter was
+                    # folded into W at admission (cost charged there), so
+                    # steps must skip LoRA math entirely — running the
+                    # batched path with adapter_slot=0 would silently
+                    # apply whatever adapter sits in pool slot 0
                     req.selected_adapter = req.true_adapter
+                    slot.merged = True
                 elif ecfg.policy == "edgelora_no_aas" or req.adapter_id is not None:
                     # explicit adapter: bypass adaptive selection (Alg 1 l.1)
                     req.selected_adapter = (req.adapter_id
                                             if req.adapter_id is not None
                                             else req.true_adapter)
                 else:
-                    if getattr(self.router, "costs_forward", False):
-                        # router forward ≈ one prompt pass (paper Table 6)
-                        b = self._bucket(req.prompt_len)
-                        toks = self._padded_prompt(req, b)[None, :]
-                        _, dt = self._timed(("router", b),
-                                            self.router.scores_batch, toks)
-                        now += dt
-                        scores = self.router.scores_batch(toks)[0]
-                    else:
-                        scores = self.router.scores(req)
-                    aid, _ = select_adapter(np.asarray(scores), self.manager,
+                    # scores are computed (and, for a learned router,
+                    # charged) once per request and cached on the slot: a
+                    # pool-exhausted deferral below must not re-roll the
+                    # oracle RNG or re-charge a router forward on retry
+                    scores = slot.sel_scores
+                    if scores is None:
+                        if getattr(self.router, "costs_forward", False):
+                            # router forward ≈ one prompt pass (Table 6)
+                            b = self._bucket(req.prompt_len)
+                            toks = self._padded_prompt(req, b)[None, :]
+                            sb, dt = self._timed(("router", b),
+                                                 self.router.scores_batch,
+                                                 toks)
+                            now += dt
+                            scores = np.asarray(sb)[0]
+                        else:
+                            scores = np.asarray(self.router.scores(req))
+                        slot.sel_scores = scores
+                    # re-select from cached scores each attempt: the pool
+                    # contents change while deferred, so a cached top-k
+                    # adapter may become acquirable (Algorithm 1 intent)
+                    aid, _ = select_adapter(scores, self.manager,
                                             ecfg.top_k)
                     req.selected_adapter = aid
                 if ecfg.policy != "llamacpp":
-                    pool_slot, loaded = self.manager.acquire(
-                        req.selected_adapter)
+                    try:
+                        pool_slot, loaded = self.manager.acquire(
+                            req.selected_adapter)
+                    except PoolExhaustedError:
+                        # every pool block is pinned by an in-flight
+                        # request (γ > R under adapter-diverse load):
+                        # leave the slot SELECTING and retry after a
+                        # completion unpins — pins are only held by
+                        # PREFILL/GENERATE slots, so the loop always
+                        # progresses elsewhere
+                        continue
                     self.manager.pin(req.selected_adapter)
                     now += self._pending_load_cost
                     self._pending_load_cost = 0.0
                 else:
                     pool_slot = 0  # merged weights: adapter rides W
+                slot.sel_scores = None
                 slot.adapter_slot = pool_slot
                 slot.state = SlotState.PREFILL
                 progressed = True
@@ -358,6 +429,7 @@ class EdgeLoRAEngine:
                 slot.last_token = int(first_tok[0])
                 req.first_token_time = now
                 req.generated = 1
+                req.tokens = [slot.last_token]
                 slot.state = SlotState.GENERATE
                 progressed = True
 
@@ -371,7 +443,10 @@ class EdgeLoRAEngine:
                     tokens[slot.index] = slot.last_token
                     pos[slot.index] = slot.pos
                     sids[slot.index] = slot.adapter_slot
-                if ecfg.policy == "dlora" and dlora_mode == "merged":
+                merged_step = (ecfg.policy == "llamacpp"
+                               or (ecfg.policy == "dlora"
+                                   and dlora_mode == "merged"))
+                if merged_step:
                     (next_toks, self.cache), dt = self._timed(
                         ("decode_merged",), self._decode_merged,
                         self.params, jnp.asarray(tokens), self.cache,
@@ -388,6 +463,7 @@ class EdgeLoRAEngine:
                     slot.last_token = int(next_np[slot.index])
                     slot.pos += 1
                     req.generated += 1
+                    req.tokens.append(slot.last_token)
                     if req.generated >= req.output_len \
                             or slot.pos >= ecfg.max_ctx - 1:
                         req.finish_time = now

@@ -1,0 +1,129 @@
+"""Minimal fallback for the ``hypothesis`` API subset these tests use.
+
+The container cannot install packages, so property tests degrade to a
+seeded-random sweep: each ``@given`` test draws ``max_examples`` example
+dicts from a deterministic RNG (seeded per test name) and runs the body
+once per example. This keeps the properties exercised — less thoroughly
+than real hypothesis (no shrinking, no coverage-guided search), but
+deterministically and offline.
+
+Usage in test modules::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Only the strategies actually used by this suite are provided:
+``integers``, ``sampled_from``, ``lists``, ``tuples``, ``sets``,
+``booleans``, ``floats``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+_SETTINGS_ATTR = "_compat_max_examples"
+
+
+class SearchStrategy:
+    """A strategy is just a draw function over a ``random.Random``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the ``hypothesis.strategies`` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               **_ignored) -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> SearchStrategy:
+        elements = list(elements)
+        return SearchStrategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    @staticmethod
+    def lists(elements: SearchStrategy, min_size: int = 0,
+              max_size: int = 10) -> SearchStrategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def tuples(*elements: SearchStrategy) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: tuple(e.example(rng) for e in elements))
+
+    @staticmethod
+    def sets(elements: SearchStrategy, min_size: int = 0,
+             max_size: int = 10) -> SearchStrategy:
+        def draw(rng):
+            target = rng.randint(min_size, max_size)
+            out = set()
+            # bounded attempts: small domains may not fill `target`
+            for _ in range(8 * (target + 1)):
+                if len(out) >= target:
+                    break
+                out.add(elements.example(rng))
+            return out
+        return SearchStrategy(draw)
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Records max_examples on the decorated test (order-independent with
+    @given: whichever wraps last, the attribute is visible at call time)."""
+
+    def deco(fn):
+        setattr(fn, _SETTINGS_ATTR, max_examples)
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, _SETTINGS_ATTR,
+                        getattr(fn, _SETTINGS_ATTR, DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = {name: strat.example(rng)
+                         for name, strat in strategy_kwargs.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception:
+                    print(f"[hypothesis-compat] falsifying example "
+                          f"#{i} for {fn.__qualname__}: {drawn!r}")
+                    raise
+
+        # pytest must not see the drawn parameters as fixtures: hide the
+        # original signature and keep only non-strategy params (fixtures).
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco

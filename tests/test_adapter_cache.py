@@ -1,7 +1,10 @@
 """Heterogeneous memory manager: LRU/LFU + pool invariants (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.adapter_cache import AdapterMemoryManager
 

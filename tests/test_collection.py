@@ -1,0 +1,24 @@
+"""Collection smoke check: `pytest --collect-only` must exit 0.
+
+Import-time regressions (like the suite-wide hypothesis ImportError this
+guards against) kill every module at collection before a single test
+runs; this test fails fast and points at the import error directly.
+"""
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_collect_only_exits_zero():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "-p", "no:cacheprovider"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, (
+        f"collection failed\n--- stdout ---\n{proc.stdout[-4000:]}"
+        f"\n--- stderr ---\n{proc.stderr[-2000:]}")

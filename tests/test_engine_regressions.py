@@ -1,0 +1,161 @@
+"""Engine regression tests: llamacpp merged execution, prompt-bucket
+coverage, and the batched-LoRA backend knob (einsum vs sgmv)."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.serving.engine import EdgeLoRAEngine, EngineConfig
+from repro.serving.workload import WorkloadConfig, generate_trace
+
+
+def _cfg(n_adapters=6):
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    return dataclasses.replace(
+        cfg, lora=dataclasses.replace(cfg.lora, n_adapters=n_adapters))
+
+
+def _trace(cfg, seed=0, input_range=(4, 20), output_range=(3, 6)):
+    return generate_trace(WorkloadConfig(
+        n_adapters=cfg.lora.n_adapters, request_rate=4.0, duration=3.0,
+        input_range=input_range, output_range=output_range,
+        vocab_size=cfg.vocab_size, seed=seed))
+
+
+def _tokens_by_id(trace):
+    return {r.request_id: r.tokens for r in trace}
+
+
+# ---------------------------------------------------------------------------
+# llamacpp baseline must execute MERGED steps
+# ---------------------------------------------------------------------------
+
+
+def test_llamacpp_outputs_independent_of_pool_contents():
+    """The merged baseline folds the adapter into W; pool slot contents
+    must be invisible. (The old code ran the unmerged batched step with
+    adapter_slot=0, silently applying whatever adapter sat in slot 0.)"""
+    cfg = _cfg()
+    ecfg = dict(n_slots=2, max_ctx=48, prompt_buckets=(16, 32),
+                policy="llamacpp", memory_budget=1e12)
+    eng1 = EdgeLoRAEngine(cfg, EngineConfig(**ecfg))
+    t1 = _trace(cfg)
+    eng1.serve(t1)
+
+    eng2 = EdgeLoRAEngine(cfg, EngineConfig(**ecfg))
+    # corrupt every adapter pool slot; merged execution must not notice
+    eng2.lora_pool = jax.tree.map(lambda x: x + 37.0, eng2.lora_pool)
+    t2 = _trace(cfg)
+    eng2.serve(t2)
+
+    assert _tokens_by_id(t1) == _tokens_by_id(t2)
+    assert all(r.tokens and len(r.tokens) == r.output_len for r in t1)
+
+
+def test_llamacpp_never_runs_unmerged_steps():
+    cfg = _cfg()
+    eng = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=2, max_ctx=48, prompt_buckets=(16, 32), policy="llamacpp",
+        memory_budget=1e12))
+
+    def unmerged_forbidden(*args, **kwargs):
+        raise AssertionError("llamacpp executed an unmerged batched step")
+
+    eng._prefill = unmerged_forbidden
+    eng._decode = unmerged_forbidden
+    trace = _trace(cfg, seed=1)
+    summary = eng.serve(trace)
+    assert summary.n_completed == len(trace)
+
+
+# ---------------------------------------------------------------------------
+# prompt buckets must cover max_ctx; oversized prompts fail loudly
+# ---------------------------------------------------------------------------
+
+
+def test_buckets_extended_to_max_ctx():
+    cfg = _cfg()
+    eng = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=2, max_ctx=48, prompt_buckets=(16,),
+        policy="edgelora_no_aas"))
+    assert eng._buckets == (16, 48)
+    assert eng._bucket(20) == 48  # used to clamp to 16 and truncate
+
+
+def test_long_prompt_not_truncated():
+    """Prompts between the largest configured bucket and max_ctx decode
+    the same tokens as with an amply-sized bucket (pre-fix they were cut
+    to the largest bucket while slot.pos advanced past it, so decode
+    attended to KV positions that were never written)."""
+    cfg = _cfg()
+    eng_small = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=2, max_ctx=48, prompt_buckets=(16,),
+        policy="edgelora_no_aas"))
+    t_small = _trace(cfg, seed=2, input_range=(18, 24))
+    eng_small.serve(t_small)
+    assert all(r.generated == r.output_len for r in t_small)
+
+    eng_big = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=2, max_ctx=48, prompt_buckets=(32,),
+        policy="edgelora_no_aas"))
+    t_big = _trace(cfg, seed=2, input_range=(18, 24))
+    eng_big.serve(t_big)
+    assert _tokens_by_id(t_small) == _tokens_by_id(t_big)
+
+
+def test_prompt_exceeding_max_ctx_raises():
+    cfg = _cfg()
+    eng = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=2, max_ctx=48, prompt_buckets=(16,),
+        policy="edgelora_no_aas"))
+    trace = _trace(cfg, seed=3, input_range=(50, 60))
+    with pytest.raises(ValueError, match="max_ctx"):
+        eng.serve(trace)
+
+
+# ---------------------------------------------------------------------------
+# batched-LoRA backend knob
+# ---------------------------------------------------------------------------
+
+
+def test_backend_auto_resolves_einsum_off_tpu():
+    cfg = _cfg()
+    eng = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=2, max_ctx=32, prompt_buckets=(16,), policy="edgelora"))
+    expect = "sgmv" if jax.default_backend() == "tpu" else "einsum"
+    assert eng.lora_backend == expect
+
+
+def test_more_slots_than_pool_blocks_defers_instead_of_crashing():
+    """γ (engine slots) > R (resident pool blocks) under adapter-diverse
+    load: admission must defer while every block is pinned by in-flight
+    requests, not raise 'adapter pool exhausted' (timing-dependent crash
+    observed in the pool-size ablation benchmark)."""
+    cfg = _cfg(n_adapters=16)
+    cfg = dataclasses.replace(
+        cfg, lora=dataclasses.replace(cfg.lora, max_resident=2))
+    eng = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=4, max_ctx=32, prompt_buckets=(16,),
+        policy="edgelora_no_aas"))  # explicit adapters: maximal diversity
+    trace = generate_trace(WorkloadConfig(
+        n_adapters=16, request_rate=20.0, duration=2.0, alpha=0.0,
+        input_range=(4, 10), output_range=(3, 6),
+        vocab_size=cfg.vocab_size, seed=5))
+    summary = eng.serve(trace)
+    assert summary.n_completed == len(trace)
+    assert all(r.generated == r.output_len for r in trace)
+
+
+def test_sgmv_backend_serves_to_completion():
+    """End-to-end serve through the Pallas SGMV data path (interpret mode
+    on CPU): every request completes with full token streams."""
+    cfg = _cfg()
+    eng = EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=2, max_ctx=32, prompt_buckets=(16,), policy="edgelora",
+        lora_backend="sgmv"))
+    assert eng.lora_backend == "sgmv"
+    trace = _trace(cfg, seed=4, input_range=(4, 12))[:4]
+    summary = eng.serve(trace)
+    assert summary.n_completed == len(trace)
+    assert all(len(r.tokens) == r.output_len for r in trace)

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import flash_decode

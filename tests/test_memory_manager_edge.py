@@ -1,0 +1,85 @@
+"""AdapterMemoryManager edge cases (hypothesis-free companion to
+test_adapter_cache.py): pin exhaustion, unpin underflow, LFU ties,
+prefill bounds."""
+import pytest
+
+from repro.core.adapter_cache import AdapterMemoryManager
+
+
+def test_all_resident_pinned_raises():
+    m = AdapterMemoryManager(3)
+    for a in (1, 2, 3):
+        m.acquire(a)
+        m.pin(a)
+    with pytest.raises(RuntimeError, match="pinned"):
+        m.acquire(4)
+    # pool state survived the failed acquire: nothing evicted or freed
+    assert m.n_resident == 3 and not m.free_slots
+    for a in (1, 2, 3):
+        assert a in m
+
+
+def test_unpin_without_pin_does_not_underflow():
+    m = AdapterMemoryManager(2)
+    m.acquire(1)
+    m.unpin(1)           # never pinned: must be a no-op
+    assert 1 not in m.pinned
+    m.pin(1)             # a later real pin still protects the adapter
+    m.acquire(2)
+    m.pin(2)
+    with pytest.raises(RuntimeError):
+        m.acquire(3)
+
+
+def test_unpin_balanced_with_nested_pins():
+    m = AdapterMemoryManager(1)
+    m.acquire(7)
+    m.pin(7)
+    m.pin(7)             # two slots using the same adapter
+    m.unpin(7)
+    with pytest.raises(RuntimeError):
+        m.acquire(8)     # still pinned once
+    m.unpin(7)
+    m.acquire(8)         # fully unpinned: evictable
+    assert 8 in m and 7 not in m
+    m.unpin(7)           # extra unpin after eviction: no-op
+    assert not m.pinned
+
+
+def test_lfu_tie_breaks_by_insertion_order():
+    """Equal use counts: LFU evicts the earliest-inserted adapter (strict
+    < keeps the first minimum during the scan)."""
+    m = AdapterMemoryManager(2, policy="lfu")
+    m.acquire(1)
+    m.acquire(2)         # counts: {1: 1, 2: 1}
+    m.acquire(3)         # tie -> evict 1 (inserted first)
+    assert 1 not in m and 2 in m and 3 in m
+
+
+def test_lfu_pinned_skipped_even_if_coldest():
+    m = AdapterMemoryManager(2, policy="lfu")
+    m.acquire(1)         # count 1 (coldest)
+    m.pin(1)
+    m.acquire(2); m.acquire(2)
+    m.acquire(3)         # must evict 2 (count 2), not pinned 1 (count 1)
+    assert 1 in m and 3 in m and 2 not in m
+
+
+def test_prefill_random_respects_max_resident():
+    loads = []
+    m = AdapterMemoryManager(2, load_fn=lambda a, s: loads.append((a, s)))
+    m.prefill_random([4, 5, 6, 7, 8])
+    assert m.n_resident == 2
+    assert len(loads) == 2
+    assert not m.free_slots
+    # slots handed out are distinct pool blocks
+    assert len({s for _, s in loads}) == 2
+
+
+def test_prefill_random_idempotent_and_dedup():
+    m = AdapterMemoryManager(3)
+    m.prefill_random([1, 1, 2])
+    assert m.n_resident == 2          # duplicate id loads once
+    m.prefill_random([3, 4])
+    assert m.n_resident == 3          # tops up the single free slot
+    assert 3 in m and 4 not in m

@@ -6,6 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# serves full traces under every policy (one jit warmup per policy);
+# the fast engine regressions live in test_engine_regressions.py
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config, reduced_config
 from repro.serving.engine import (EdgeLoRAEngine, EngineConfig,
                                   OutOfMemoryError)
