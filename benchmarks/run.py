@@ -11,7 +11,8 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import batched_lora_micro, router_bench, serving_tables
+    from benchmarks import (batched_lora_micro, prefill_batching,
+                            router_bench, serving_tables)
     print("name,us_per_call,derived")
     # paper tables on the serving engine
     serving_tables.table4_throughput_vs_adapters()
@@ -24,6 +25,9 @@ def main() -> None:
     serving_tables.table11_power_proxy()
     serving_tables.table14_slots()
     serving_tables.table6_learned_router_overhead()
+    # batched prompt-pass compute (sequential vs batched prefill/router;
+    # also writes BENCH_prefill_batching.json for the perf trajectory)
+    prefill_batching.main()
     # batched LoRA micro + kernels
     batched_lora_micro.fig6_batched_vs_sequential()
     batched_lora_micro.backend_einsum_vs_sgmv()

@@ -56,6 +56,13 @@ class Slot:
     # router scores cached across SELECTING retries (pool-exhausted
     # deferral must not re-score the request)
     sel_scores: Optional[object] = None
+    # merged execution (llamacpp / dlora-merged): steps skip LoRA math
+    merged: bool = False
+    # prompt padded once to its bucket and cached for the request's
+    # lifetime — the router forward and the prefill share one copy, and
+    # batch grouping keys off the cached bucket
+    bucket: Optional[int] = None
+    padded_prompt: Optional[object] = None  # jnp [bucket] int32
 
     def assign(self, req: Request) -> None:
         assert self.state == SlotState.IDLE
@@ -63,6 +70,9 @@ class Slot:
         self.state = SlotState.SELECTING
         self.pos = 0
         self.sel_scores = None
+        self.merged = False
+        self.bucket = None
+        self.padded_prompt = None
 
     def release(self) -> Request:
         req = self.request
@@ -70,6 +80,9 @@ class Slot:
         self.state = SlotState.IDLE
         self.pos = 0
         self.sel_scores = None
+        self.merged = False
+        self.bucket = None
+        self.padded_prompt = None
         return req
 
 

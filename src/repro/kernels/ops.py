@@ -27,6 +27,12 @@ def auto_blk_t(t: int, n_slots: int, requested: int = DEFAULT_BLK_T) -> int:
     batches (T ≈ R) want small blocks while prefill wants the full
     MXU-aligned 128. Target the per-slot run length, clamped to
     [8, requested] and rounded up to a power of two (sublane-aligned).
+
+    T is the *total* flattened token count: with the engine's batched
+    multi-slot prefill it is B · bucket (all grouped requests' prompt
+    tokens in one call), so multi-request groups naturally climb toward
+    the full MXU block while a lone B=1 prefill of a short bucket keeps
+    a smaller block and less per-adapter padding.
     """
     per_slot = max(8, -(-t // max(1, n_slots)))
     blk = 1 << (per_slot - 1).bit_length()

@@ -41,6 +41,12 @@ def main(argv=None) -> int:
                     choices=["auto", "einsum", "sgmv"],
                     help="batched-LoRA compute path (default: the model "
                          "config's 'auto' — sgmv on TPU, einsum elsewhere)")
+    ap.add_argument("--no-prefill-batching", dest="prefill_batching",
+                    action="store_false",
+                    help="one B=1 prefill per slot (pre-batching baseline)")
+    ap.add_argument("--no-router-batching", dest="router_batching",
+                    action="store_false",
+                    help="one router forward per SELECTING slot")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
@@ -63,7 +69,9 @@ def main(argv=None) -> int:
         n_slots=args.n_slots, top_k=args.top_k, policy=args.policy,
         max_ctx=args.max_ctx, prompt_buckets=(32, 64),
         memory_budget=args.memory_budget, cache_policy=args.cache_policy,
-        lora_backend=args.lora_backend, seed=args.seed)
+        lora_backend=args.lora_backend,
+        prefill_batching=args.prefill_batching,
+        router_batching=args.router_batching, seed=args.seed)
     try:
         engine = EdgeLoRAEngine(cfg, ecfg)
     except OutOfMemoryError as e:
@@ -80,7 +88,8 @@ def main(argv=None) -> int:
               f"avg_latency={summary.avg_latency:.3f}s "
               f"first_token={summary.avg_first_token:.3f}s "
               f"slo={summary.slo_attainment:.1%} "
-              f"hit_rate={summary.cache_hit_rate:.1%}")
+              f"hit_rate={summary.cache_hit_rate:.1%} "
+              f"{summary.batching_row()}")
     return 0
 
 

@@ -127,8 +127,12 @@ class Model:
         [B, V], cache).
 
         ``lengths`` [B]: real prompt lengths for right-padded buckets —
-        logits come from position length-1 and cache entries past the real
-        prompt are invalidated (the serving engine's bucketed prefill).
+        logits come from position length-1 **per row** (the batched
+        gather below) and cache entries past each row's real prompt are
+        invalidated. The serving engine's batched multi-slot prefill
+        relies on every [B]-shaped input being per-request: B > 1 rows
+        may carry different lengths and (via ``lora_mode.adapter_ids``)
+        different adapters.
         """
         cfg = self.cfg
         tokens = batch["tokens"]
@@ -181,7 +185,9 @@ def _invalidate_past(cache: Dict, lengths: jax.Array) -> Dict:
 
     Attention caches are dicts with a 'pos' leaf of shape [..., B, C]
     (group/layer stack dims leading); SSM caches have no 'pos' and were
-    already masked via dt=0.
+    already masked via dt=0. ``lengths`` [B] broadcasts per row, so a
+    batched multi-slot prefill invalidates each request's tail
+    independently — row i keeps positions < lengths[i] only.
     """
     def walk(node):
         if isinstance(node, dict):

@@ -4,14 +4,31 @@ adapters (paper §3/§4), plus the llama.cpp-style baseline policy.
 Architecture mirrors the paper: a **Server Manager** (slot state machine +
 adaptive adapter selection + heterogeneous memory manager, host-side
 Python) drives a **Computing Backend** (jit'd JAX prefill/decode steps over
-static shapes). The decode step batches *all* slots regardless of which
-adapter each uses — Batch LoRA Inference — with per-slot adapter pool ids
-flowing into ``LoRAMode('batched', ...)``.
+static shapes). *All* batch-shaped compute is gathered, batched, and
+scattered — not just decode:
+
+* **SELECTING** (gather→batch): every slot whose router ``costs_forward``
+  is collected, grouped by prompt bucket, and scored in one
+  ``scores_batch`` call per group; per-slot scores are cached on the slot
+  so pool-exhausted deferral retries never re-score.
+* **PREFILL** (gather→batch→scatter): PREFILL slots are grouped by
+  (prompt bucket, merged-ness), each group runs one jit'd ``[B, bucket]``
+  prefill with per-row lengths and per-row adapter pool ids, and all B
+  fresh KV slices land in the global cache through one vectorized
+  scatter write (``_write_slots``) instead of B host-roundtrip writes.
+* **GENERATE**: the decode step batches *all* slots regardless of which
+  adapter each uses — Batch LoRA Inference — with per-slot adapter pool
+  ids flowing into ``LoRAMode('batched', ...)``.
+
+Groups are padded to power-of-two occupancy (rows replicate a real
+request, whose duplicate scatter write is idempotent), so the jit cache
+holds at most #buckets × log2(n_slots) prefill shapes.
 
 Timing model: the engine advances a virtual clock by *measured* wall-times
-of the jit'd steps (each unique shape warmed at init, so compile never
-pollutes the timeline). Two simulation cost-model knobs cover the traffic
-that compute steps don't measure (DESIGN.md §8):
+of the jit'd steps, keyed by ``(kind, bucket, B)`` and charged once per
+group (each unique shape is warmed uncharged on first use, so compile
+never pollutes the timeline). Two simulation cost-model knobs cover the
+traffic that compute steps don't measure (DESIGN.md §8):
 
 * ``disk_bandwidth`` (bytes/s) — adapter swap-in: every pool miss charges
   ``adapter_bytes / disk_bandwidth`` sim-seconds (the paper's disk→RAM
@@ -77,6 +94,11 @@ class EngineConfig:
     # batched-LoRA backend: 'einsum' | 'sgmv' | 'auto' | None
     # (None defers to ModelConfig.lora_backend; 'auto' → sgmv on TPU)
     lora_backend: Optional[str] = None
+    # batch prompt-shaped compute across the continuous batch (False
+    # reverts to one B=1 call per slot — the pre-batching baseline the
+    # prefill_batching benchmark and determinism tests compare against)
+    prefill_batching: bool = True
+    router_batching: bool = True
     disk_bandwidth: float = 1.0e9    # adapter swap-in bytes/s (host->HBM)
     mem_bandwidth: float = 60.0e9    # merge/unmerge traffic (llama.cpp mode)
     memory_budget: float = 6.0e9     # adapter memory budget (llamacpp preload)
@@ -199,15 +221,25 @@ class EdgeLoRAEngine:
         self._prefill_merged = jax.jit(prefill_merged)
         self._decode_merged = jax.jit(decode_merged)
 
-        def write_slot(gcache, lcache, slot):
+        def write_slots(gcache, bcache, slot_idx):
+            # every cache leaf carries batch at axis 1 (stack/group dim
+            # leading); one scatter lands all B fresh KV slices at their
+            # slot indices — duplicate indices (power-of-two padding rows
+            # replicating a real request) write identical data, so the
+            # scatter is idempotent regardless of execution order
             return jax.tree.map(
-                lambda g, l: jax.lax.dynamic_update_slice_in_dim(
-                    g, l.astype(g.dtype), slot, axis=1), gcache, lcache)
+                lambda g, l: g.at[:, slot_idx].set(l.astype(g.dtype)),
+                gcache, bcache)
 
-        self._write_slot = jax.jit(write_slot)
+        self._write_slots = jax.jit(write_slots)
         self.cache = self.model.init_cache(self.ecfg.n_slots,
                                            self.ecfg.max_ctx)
-        self._cache1_template = self.model.init_cache(1, self.ecfg.max_ctx)
+
+    def _fresh_cache(self, batch: int):
+        """Zeroed prefill cache for one batch group (no persistent
+        per-shape templates: a template would be copied per call anyway,
+        so caching it only retains dead memory)."""
+        return self.model.init_cache(batch, self.ecfg.max_ctx)
 
     def _bucket(self, n: int) -> int:
         for b in self._buckets:
@@ -220,6 +252,27 @@ class EdgeLoRAEngine:
         raise ValueError(
             f"prompt length {n} exceeds the largest bucket "
             f"{self._buckets[-1]} (max_ctx={self.ecfg.max_ctx})")
+
+    def _slot_prompt(self, slot: Slot) -> jax.Array:
+        """Bucket + right-pad the slot's prompt once; the router forward,
+        batch grouping, and prefill all reuse the cached copy (the prompt
+        used to be padded twice for router-forward requests)."""
+        if slot.padded_prompt is None:
+            slot.bucket = self._bucket(slot.request.prompt_len)
+            slot.padded_prompt = self._padded_prompt(slot.request,
+                                                     slot.bucket)
+        return slot.padded_prompt
+
+    def _pad_group(self, group: List[Slot]) -> List[Slot]:
+        """Pad a batch group to power-of-two occupancy (capped at
+        n_slots — a group can never hold more) by replicating its first
+        slot: one jit shape per (bucket, 2^i) instead of per exact
+        occupancy, bounding jit-cache growth. Replica rows compute the
+        same values as the real row, so their scatter writes (same slot
+        index, same data) are idempotent."""
+        k = len(group)
+        padded = min(1 << (k - 1).bit_length(), self.ecfg.n_slots)
+        return group + [group[0]] * (padded - k)
 
     def _timed(self, key, fn, *args):
         """Run fn; charge its measured duration (first call per key warms
@@ -258,6 +311,13 @@ class EdgeLoRAEngine:
         queue = sorted(trace, key=lambda r: r.arrival_time)
         qi = 0
         completed: List[Request] = []
+        # per-phase step invocation counts + prefill group-size histogram
+        # (ServingSummary surfaces them; batching makes prefill_steps +
+        # router_steps drop below the number of requests served)
+        self.prefill_steps = 0
+        self.decode_steps = 0
+        self.router_steps = 0
+        self.prefill_batch_hist: Dict[int, int] = {}
         active_adapter: Optional[int] = None  # llamacpp single-active mode
         dlora_mode = "unmerged"               # dlora dynamic mode
         dlora_merged_adapter: Optional[int] = None
@@ -325,6 +385,33 @@ class EdgeLoRAEngine:
                 progressed = True
 
             # ---- adapter selection (Algorithm 1) ---------------------
+            # batched router scoring: every SELECTING slot that needs a
+            # learned-router forward is scored in one scores_batch call
+            # per prompt bucket (same gather→batch trick as prefill);
+            # scores land in slot.sel_scores exactly as the solo path
+            # caches them, so pool-exhausted deferral semantics below are
+            # unchanged
+            if (ecfg.router_batching
+                    and ecfg.policy not in ("dlora", "llamacpp",
+                                            "edgelora_no_aas")
+                    and getattr(self.router, "costs_forward", False)):
+                unscored = [
+                    s for s in self.slots.in_state(SlotState.SELECTING)
+                    if s.sel_scores is None and s.request.adapter_id is None]
+                score_groups: Dict[int, List[Slot]] = {}
+                for slot in unscored:
+                    self._slot_prompt(slot)
+                    score_groups.setdefault(slot.bucket, []).append(slot)
+                for b, group in score_groups.items():
+                    rows = self._pad_group(group)
+                    toks = jnp.stack([s.padded_prompt for s in rows])
+                    sb, dt = self._timed(("router", b, len(rows)),
+                                         self.router.scores_batch, toks)
+                    now += dt
+                    self.router_steps += 1
+                    sb = np.asarray(sb)
+                    for i, slot in enumerate(group):
+                        slot.sel_scores = sb[i]
             for slot in self.slots.in_state(SlotState.SELECTING):
                 req = slot.request
                 if ecfg.policy == "dlora":
@@ -367,13 +454,14 @@ class EdgeLoRAEngine:
                     scores = slot.sel_scores
                     if scores is None:
                         if getattr(self.router, "costs_forward", False):
+                            # solo fallback (router_batching off): one
                             # router forward ≈ one prompt pass (Table 6)
-                            b = self._bucket(req.prompt_len)
-                            toks = self._padded_prompt(req, b)[None, :]
-                            sb, dt = self._timed(("router", b),
+                            toks = self._slot_prompt(slot)[None, :]
+                            sb, dt = self._timed(("router", slot.bucket, 1),
                                                  self.router.scores_batch,
                                                  toks)
                             now += dt
+                            self.router_steps += 1
                             scores = np.asarray(sb)[0]
                         else:
                             scores = np.asarray(self.router.scores(req))
@@ -406,31 +494,26 @@ class EdgeLoRAEngine:
                 slot.state = SlotState.PREFILL
                 progressed = True
 
-            # ---- prefill ---------------------------------------------
-            for slot in self.slots.in_state(SlotState.PREFILL):
-                req = slot.request
-                b = self._bucket(req.prompt_len)
-                toks = self._padded_prompt(req, b)[None, :]
-                cache1 = jax.tree.map(jnp.copy, self._cache1_template)
-                plen = jnp.array([req.prompt_len], jnp.int32)
-                if getattr(slot, "merged", False):
-                    (first_tok, cache1), dt = self._timed(
-                        ("prefill_merged", b), self._prefill_merged,
-                        self.params, toks, cache1, plen)
-                else:
-                    sid = jnp.array([slot.adapter_slot], jnp.int32)
-                    (first_tok, cache1), dt = self._timed(
-                        ("prefill", b), self._prefill, self.params,
-                        self.lora_pool, toks, cache1, sid, plen)
-                now += dt
-                self.cache = self._write_slot(self.cache, cache1,
-                                              slot.index)
-                slot.pos = req.prompt_len
-                slot.last_token = int(first_tok[0])
-                req.first_token_time = now
-                req.generated = 1
-                req.tokens = [slot.last_token]
-                slot.state = SlotState.GENERATE
+            # ---- prefill (gather→batch→scatter) ----------------------
+            prefilling = self.slots.in_state(SlotState.PREFILL)
+            if prefilling:
+                # group same-bucket slots (split by merged-ness: merged
+                # steps skip LoRA math entirely); one jit'd [B, bucket]
+                # prefill per group — heterogeneous adapters batch fine,
+                # the SGMV/einsum delta is per-row
+                groups: Dict[Tuple[int, bool], List[Slot]] = {}
+                for slot in prefilling:
+                    self._slot_prompt(slot)
+                    groups.setdefault((slot.bucket, slot.merged),
+                                      []).append(slot)
+                work: List[Tuple[int, bool, List[Slot]]] = []
+                for (b, merged), group in groups.items():
+                    if ecfg.prefill_batching:
+                        work.append((b, merged, group))
+                    else:  # pre-batching baseline: one B=1 call per slot
+                        work.extend((b, merged, [s]) for s in group)
+                for b, merged, group in work:
+                    now += self._prefill_group(b, merged, group, now)
                 progressed = True
 
             # ---- batched decode (Batch LoRA Inference) ----------------
@@ -457,6 +540,7 @@ class EdgeLoRAEngine:
                         self.lora_pool, jnp.asarray(tokens), self.cache,
                         jnp.asarray(pos), jnp.asarray(sids))
                 now += dt
+                self.decode_steps += 1
                 next_np = np.asarray(next_toks)
                 for slot in gen:
                     req = slot.request
@@ -468,12 +552,10 @@ class EdgeLoRAEngine:
                             or slot.pos >= ecfg.max_ctx - 1:
                         req.finish_time = now
                         if ecfg.policy != "llamacpp" \
-                                and not getattr(slot, "merged", False):
+                                and not slot.merged:
                             self.manager.unpin(req.selected_adapter)
                         completed.append(slot.release())
                 progressed = True
-                if ecfg.policy == "llamacpp" and not self.slots.any_active:
-                    pass  # adapter switch decided at next admission
 
             # ---- idle: jump to next arrival ---------------------------
             if not progressed:
@@ -485,7 +567,55 @@ class EdgeLoRAEngine:
         duration = max(now, 1e-9)
         return summarize(queue, duration, ecfg.slo_seconds,
                          cache_stats=self.manager.stats,
-                         energy_proxy=self.busy_time / duration)
+                         energy_proxy=self.busy_time / duration,
+                         step_stats={
+                             "prefill_steps": self.prefill_steps,
+                             "decode_steps": self.decode_steps,
+                             "router_steps": self.router_steps,
+                             "prefill_batch_hist": dict(
+                                 self.prefill_batch_hist),
+                         })
+
+    def _prefill_group(self, bucket: int, merged: bool, group: List[Slot],
+                       now: float) -> float:
+        """Run one batched prefill over ``group`` (same bucket, same
+        merged-ness, mixed adapters) and scatter all fresh KV slices into
+        the global cache in one vectorized write. Returns the wall-time
+        charged for the group (once, not per member)."""
+        rows = self._pad_group(group)
+        toks = jnp.stack([s.padded_prompt for s in rows])
+        lengths = jnp.asarray(
+            np.fromiter((s.request.prompt_len for s in rows), np.int32,
+                        count=len(rows)))
+        cacheb = self._fresh_cache(len(rows))
+        if merged:
+            (first, cacheb), dt = self._timed(
+                ("prefill_merged", bucket, len(rows)),
+                self._prefill_merged, self.params, toks, cacheb, lengths)
+        else:
+            sids = jnp.asarray(
+                np.fromiter((s.adapter_slot for s in rows), np.int32,
+                            count=len(rows)))
+            (first, cacheb), dt = self._timed(
+                ("prefill", bucket, len(rows)), self._prefill,
+                self.params, self.lora_pool, toks, cacheb, sids, lengths)
+        slot_idx = jnp.asarray(
+            np.fromiter((s.index for s in rows), np.int32,
+                        count=len(rows)))
+        self.cache = self._write_slots(self.cache, cacheb, slot_idx)
+        self.prefill_steps += 1
+        self.prefill_batch_hist[len(group)] = \
+            self.prefill_batch_hist.get(len(group), 0) + 1
+        first_np = np.asarray(first)
+        for i, slot in enumerate(group):
+            req = slot.request
+            slot.pos = req.prompt_len
+            slot.last_token = int(first_np[i])
+            req.first_token_time = now + dt
+            req.generated = 1
+            req.tokens = [slot.last_token]
+            slot.state = SlotState.GENERATE
+        return dt
 
     def _padded_prompt(self, req: Request, bucket: int) -> jax.Array:
         toks = np.zeros((bucket,), np.int32)

@@ -26,16 +26,37 @@ class ServingSummary:
     cache_hit_rate: Optional[float] = None
     adapter_loads: Optional[int] = None
     energy_proxy: Optional[float] = None
+    # per-phase step invocation counts (one jit'd call each): batched
+    # prompt-shaped compute makes prefill_steps + router_steps fall below
+    # the number of requests served — the amortization the batching
+    # benchmarks assert on
+    prefill_steps: Optional[int] = None
+    decode_steps: Optional[int] = None
+    router_steps: Optional[int] = None
+    # prefill group size -> #groups (real occupancy, before the engine
+    # pads groups to power-of-two batch shapes)
+    prefill_batch_hist: Optional[Dict[int, int]] = None
 
     def row(self) -> Dict[str, float]:
         return {k: getattr(self, k) for k in (
             "throughput", "avg_latency", "avg_first_token",
             "slo_attainment", "tokens_per_second")}
 
+    def batching_row(self) -> str:
+        """Compact step-count digest for benchmark CSV derived fields
+        (';'-joined: the digest must stay a single CSV column in the
+        ``name,us_per_call,derived`` row format)."""
+        hist = "|".join(f"{b}x{n}" for b, n in
+                        sorted((self.prefill_batch_hist or {}).items()))
+        return (f"pf_steps={self.prefill_steps};"
+                f"router_steps={self.router_steps};"
+                f"dec_steps={self.decode_steps};pf_hist={hist or 'n/a'}")
+
 
 def summarize(requests: List[Request], duration: float,
               slo_seconds: float = 6.0, cache_stats=None,
-              energy_proxy: Optional[float] = None) -> ServingSummary:
+              energy_proxy: Optional[float] = None,
+              step_stats: Optional[Dict] = None) -> ServingSummary:
     done = [r for r in requests if r.finish_time is not None]
     lat = np.array([r.finish_time - r.arrival_time for r in done]) \
         if done else np.array([np.nan])
@@ -56,4 +77,5 @@ def summarize(requests: List[Request], duration: float,
         cache_hit_rate=cache_stats.hit_rate if cache_stats else None,
         adapter_loads=cache_stats.loads if cache_stats else None,
         energy_proxy=energy_proxy,
+        **(step_stats or {}),
     )
