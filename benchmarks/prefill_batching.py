@@ -51,12 +51,16 @@ def _prompt_batch(cfg, bucket: int, burst: int, n_pool: int = 8,
     return jnp.asarray(toks), jnp.asarray(lengths), jnp.asarray(sids)
 
 
-def prefill_sweep(records: List[Dict]) -> None:
+def prefill_sweep(records: List[Dict], smoke: bool = False) -> None:
     """One B=k prefill vs k sequential B=1 prefills, per bucket/backend."""
-    for backend in BACKENDS:
+    bursts = BURSTS[:1] if smoke else BURSTS
+    buckets = BUCKETS[:1] if smoke else BUCKETS
+    backends = BACKENDS[:1] if smoke else BACKENDS
+    it_solo, it_burst = (3, 3) if smoke else (10, 15)
+    for backend in backends:
         cfg, eng = _engine(backend)
-        for bucket in BUCKETS:
-            toks, lengths, sids = _prompt_batch(cfg, bucket, max(BURSTS),
+        for bucket in buckets:
+            toks, lengths, sids = _prompt_batch(cfg, bucket, max(bursts),
                                                 n_pool=eng.n_pool)
 
             def run(b):
@@ -67,10 +71,12 @@ def prefill_sweep(records: List[Dict]) -> None:
             # solo reference measured in two windows (before and after
             # the burst cells) — min across both guards the comparison
             # against a transient host-noise spike poisoning one side
-            us_solo = time_fn(run, 1, iters=10, reduce="min")
-            cells = [(burst, time_fn(run, burst, iters=15, reduce="min"))
-                     for burst in BURSTS]
-            us_solo = min(us_solo, time_fn(run, 1, iters=10, reduce="min"))
+            us_solo = time_fn(run, 1, iters=it_solo, reduce="min")
+            cells = [(burst, time_fn(run, burst, iters=it_burst,
+                                     reduce="min"))
+                     for burst in bursts]
+            us_solo = min(us_solo, time_fn(run, 1, iters=it_solo,
+                                           reduce="min"))
             for burst, us_batched in cells:
                 per_req = us_batched / burst
                 speedup = burst * us_solo / max(us_batched, 1e-9)
@@ -99,19 +105,22 @@ def _learned_router(cfg):
     return LearnedRouter(model, params, head), params
 
 
-def router_sweep(records: List[Dict]) -> None:
+def router_sweep(records: List[Dict], smoke: bool = False) -> None:
     """One B=k scores_batch vs k solo router forwards (learned router)."""
     cfg = serving_cfg(n_adapters=8)
     router, _ = _learned_router(cfg)
-    for bucket in BUCKETS:
-        toks, _, _ = _prompt_batch(cfg, bucket, max(BURSTS), seed=1)
-        us_solo = time_fn(router.scores_batch, toks[:1], iters=10,
+    bursts = BURSTS[:1] if smoke else BURSTS
+    buckets = BUCKETS[:1] if smoke else BUCKETS
+    it_solo, it_burst = (3, 3) if smoke else (10, 15)
+    for bucket in buckets:
+        toks, _, _ = _prompt_batch(cfg, bucket, max(bursts), seed=1)
+        us_solo = time_fn(router.scores_batch, toks[:1], iters=it_solo,
                           reduce="min")
         cells = [(burst, time_fn(router.scores_batch, toks[:burst],
-                                 iters=15, reduce="min"))
-                 for burst in BURSTS]
+                                 iters=it_burst, reduce="min"))
+                 for burst in bursts]
         us_solo = min(us_solo, time_fn(router.scores_batch, toks[:1],
-                                       iters=10, reduce="min"))
+                                       iters=it_solo, reduce="min"))
         for burst, us_batched in cells:
             per_req = us_batched / burst
             speedup = burst * us_solo / max(us_batched, 1e-9)
@@ -125,12 +134,13 @@ def router_sweep(records: List[Dict]) -> None:
             })
 
 
-def engine_burst_steps(records: List[Dict]) -> None:
+def engine_burst_steps(records: List[Dict], smoke: bool = False) -> None:
     """End-to-end: a same-bucket burst through serve() — step counters
     show the amortization (fewer prompt passes than requests served)."""
     from repro.core.slots import Request
     from repro.serving.engine import EdgeLoRAEngine, EngineConfig
     cfg = serving_cfg(n_adapters=8)
+    n_req = 4 if smoke else 8
     # a learned router makes the router_batching toggle observable end
     # to end (the default OracleRouter never issues a scoring forward)
     router, params = _learned_router(cfg)
@@ -139,7 +149,7 @@ def engine_burst_steps(records: List[Dict]) -> None:
         # fresh Request objects per run: serve() mutates them in place
         rng = np.random.default_rng(3)
         trace = []
-        for i in range(8):
+        for i in range(n_req):
             plen = int(rng.integers(8, 16))
             trace.append(Request(
                 request_id=i, arrival_time=0.0, prompt_len=plen,
@@ -166,11 +176,15 @@ def engine_burst_steps(records: List[Dict]) -> None:
         })
 
 
-def main(json_path: str = "BENCH_prefill_batching.json") -> None:
+def main(json_path: str = "BENCH_prefill_batching.json",
+         smoke: bool = False) -> None:
+    """``smoke=True`` shrinks every sweep to its smallest cell (CI's
+    benchmark-smoke lane: exercise the code path + artifact schema, not
+    the timings)."""
     records: List[Dict] = []
-    prefill_sweep(records)
-    router_sweep(records)
-    engine_burst_steps(records)
+    prefill_sweep(records, smoke=smoke)
+    router_sweep(records, smoke=smoke)
+    engine_burst_steps(records, smoke=smoke)
     with open(json_path, "w") as f:
         json.dump(records, f, indent=2, default=float)
     emit("prefill_batching/json", 0.0, f"wrote={json_path}")

@@ -7,7 +7,6 @@ ceiling a no-router deployment gets), (c) chance."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config, reduced_config

@@ -11,7 +11,7 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import (batched_lora_micro, prefill_batching,
+    from benchmarks import (batched_lora_micro, paged_kv, prefill_batching,
                             router_bench, serving_tables)
     print("name,us_per_call,derived")
     # paper tables on the serving engine
@@ -28,6 +28,9 @@ def main() -> None:
     # batched prompt-pass compute (sequential vs batched prefill/router;
     # also writes BENCH_prefill_batching.json for the perf trajectory)
     prefill_batching.main()
+    # paged vs dense KV capacity at fixed arena bytes (+ stream parity,
+    # page-gather kernel check; writes BENCH_paged_kv.json)
+    paged_kv.main()
     # batched LoRA micro + kernels
     batched_lora_micro.fig6_batched_vs_sequential()
     batched_lora_micro.backend_einsum_vs_sgmv()

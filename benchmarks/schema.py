@@ -1,0 +1,71 @@
+"""Shared schema check for ``BENCH_*.json`` artifacts.
+
+Every benchmark that persists machine-readable results writes a flat
+list of records. CI's benchmark-smoke job (and the smoke runner) holds
+them all to one contract so a silently-broken benchmark script — one
+that writes an empty list, NaNs, or a malformed record — fails loudly
+instead of poisoning the perf trajectory:
+
+* the file parses as JSON and is a non-empty list of flat dicts
+* every record carries a ``kind`` string (the record's table/figure id)
+* every record carries at least one numeric field, and every numeric
+  field is finite (no NaN/inf — wall-time math on a broken engine run
+  produces exactly those)
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+from typing import List
+
+
+def _is_number(value) -> bool:
+    return isinstance(value, (int, float)) and not isinstance(value, bool)
+
+
+def _bad_floats(record: dict) -> List[str]:
+    bad = []
+    for key, value in record.items():
+        leaves = value.items() if isinstance(value, dict) else [(None, value)]
+        for sub, leaf in leaves:
+            name = key if sub is None else f"{key}.{sub}"
+            if isinstance(leaf, float) and not math.isfinite(leaf):
+                bad.append(name)
+    return bad
+
+
+def validate_bench_records(records, name: str = "<records>") -> List[str]:
+    """Return a list of schema violations (empty == valid)."""
+    if not isinstance(records, list):
+        got = type(records).__name__
+        return [f"{name}: top level is {got}, expected a list of records"]
+    if not records:
+        return [f"{name}: empty record list"]
+    errors: List[str] = []
+    for i, rec in enumerate(records):
+        where = f"{name}[{i}]"
+        if not isinstance(rec, dict):
+            errors.append(f"{where}: {type(rec).__name__}, expected dict")
+            continue
+        kind = rec.get("kind")
+        if not isinstance(kind, str) or not kind:
+            errors.append(f"{where}: missing/empty 'kind' field")
+        if not any(_is_number(v) for v in rec.values()):
+            errors.append(f"{where}: no numeric fields")
+        for field in _bad_floats(rec):
+            errors.append(f"{where}: non-finite value in {field}")
+    return errors
+
+
+def validate_bench_file(path) -> List[str]:
+    """Schema-check one ``BENCH_*.json``; returns violations."""
+    path = Path(path)
+    if not path.exists():
+        return [f"{path}: missing"]
+    try:
+        records = json.loads(path.read_text())
+    except json.JSONDecodeError as exc:
+        return [f"{path}: invalid JSON ({exc})"]
+    return validate_bench_records(records, name=path.name)

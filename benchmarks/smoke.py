@@ -1,0 +1,52 @@
+"""Benchmark smoke runner: every registered JSON-writing benchmark in a
+tiny config, then the shared schema check over the artifacts.
+
+CI's benchmark-smoke job runs ``python -m benchmarks.smoke``: each
+benchmark executes its real code path (real engine, real kernels) at the
+smallest sweep that still writes its ``BENCH_*.json``, and the artifact
+is validated against ``benchmarks/schema.py``. A benchmark script that
+bitrots — import error, crashed sweep, empty/NaN records — fails this
+lane without costing CI the full ~15-minute harness.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.schema import validate_bench_file
+
+
+def registry():
+    """name -> (artifact path, main(json_path=..., smoke=True) callable)."""
+    from benchmarks import paged_kv, prefill_batching
+
+    return {
+        "prefill_batching": ("BENCH_prefill_batching.json", prefill_batching.main),
+        "paged_kv": ("BENCH_paged_kv.json", paged_kv.main),
+    }
+
+
+def main() -> int:
+    failures = []
+    for name, (artifact, run) in registry().items():
+        t0 = time.time()
+        try:
+            run(json_path=artifact, smoke=True)
+        except Exception as exc:  # noqa: BLE001 - report, keep smoking
+            failures.append(f"{name}: crashed: {exc!r}")
+            continue
+        errors = validate_bench_file(artifact)
+        failures.extend(f"{name}: {e}" for e in errors)
+        status = "FAIL" if errors else "ok"
+        dt = time.time() - t0
+        print(f"# smoke {name}: {status} ({dt:.1f}s, {artifact})", file=sys.stderr)
+    if failures:
+        print("\n".join(f"SMOKE FAILURE: {f}" for f in failures), file=sys.stderr)
+        return 1
+    print("# benchmark smoke: all artifacts valid", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

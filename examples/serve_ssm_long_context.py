@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
-from repro.core.lora import LoRAMode
 from repro.models import build_model
 from repro.serving.engine import EdgeLoRAEngine, EngineConfig
 from repro.serving.workload import WorkloadConfig, generate_trace

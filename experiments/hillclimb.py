@@ -70,7 +70,6 @@ def pair3():
 
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
-    import sys as _s
     which = os.environ.get("PAIR", "all")
     if which in ("all", "1"):
         pair1()

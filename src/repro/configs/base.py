@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +158,12 @@ class ModelConfig:
     # fallback), or 'auto' (sgmv on TPU, einsum elsewhere). Resolved by
     # ``repro.core.lora.resolve_lora_backend`` at engine/launch init.
     lora_backend: str = "auto"
+    # Serving KV memory layout: 'dense' reserves a max_ctx ring per slot
+    # (the reference path); 'paged' shares one block arena across slots
+    # with per-sequence block tables (``serving/kvpool.py``), so short
+    # contexts stop stranding long-context memory. EngineConfig can
+    # override per engine; streams are bit-identical across the two.
+    kv_backend: str = "dense"
 
     dtype: str = "bfloat16"
 

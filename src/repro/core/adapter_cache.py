@@ -21,7 +21,7 @@ Swap-in cost is modeled as ``adapter_bytes / disk_bandwidth`` sim-seconds
 from __future__ import annotations
 
 import collections
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 

@@ -17,7 +17,6 @@ Two implementations:
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

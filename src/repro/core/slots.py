@@ -63,6 +63,10 @@ class Slot:
     # batch grouping keys off the cached bucket
     bucket: Optional[int] = None
     padded_prompt: Optional[object] = None  # jnp [bucket] int32
+    # monotone admission counter (engine-assigned): the paged-KV engine
+    # preempts the youngest admission first (LIFO) when the block arena
+    # runs dry mid-decode
+    admit_seq: int = 0
 
     def assign(self, req: Request) -> None:
         assert self.state == SlotState.IDLE

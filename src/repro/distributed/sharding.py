@@ -18,7 +18,6 @@ import threading
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical axis -> physical mesh axis (or tuple of axes). The 'pod' axis

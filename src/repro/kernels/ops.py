@@ -10,13 +10,14 @@ shaped (jit-friendly): the padded token count is bounded by
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode
+from repro.kernels.paged_gather import paged_gather_pages
 from repro.kernels.sgmv import DEFAULT_BLK_T, sgmv_expand, sgmv_shrink
 
 
@@ -119,6 +120,35 @@ def sgmv(x: jax.Array, a_stack: jax.Array, b_stack: jax.Array,
     y_sorted = y[plan.padded_pos]
     out = jnp.zeros((t, b_stack.shape[1]), y.dtype).at[plan.perm].set(y_sorted)
     return (scale * out).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def paged_gather(arena: jax.Array, tables: jax.Array, *,
+                 interpret: bool = True, use_kernel: bool = True
+                 ) -> jax.Array:
+    """Gather block-table-addressed KV pages into contiguous sequences.
+
+    arena: [ng, n_pages, block_size, ...] (trailing dims are flattened
+    into one feature axis for the kernel and restored after); tables:
+    [B, MB] int32 physical page ids, -1 beyond each sequence's length.
+    -1 routes to the *last* page (``tables % n_pages``): the serving
+    arena reserves that slot as the trash page, so invalid entries never
+    read a live sequence's KV even before the downstream position mask
+    applies. Returns [ng, B, MB·block_size, ...]. ``use_kernel=False``
+    is the pure-jnp gather the paged serving engine uses off-TPU; the
+    Pallas path routes each page through the BlockSpec index_map
+    (scalar-prefetch DMA, see ``kernels/paged_gather.py``) — both are
+    exact gathers of the same pages.
+    """
+    ng, n_pages, bs = arena.shape[:3]
+    rest = arena.shape[3:]
+    b, mb = tables.shape
+    if not use_kernel:
+        pages = arena[:, tables % n_pages]
+        return pages.reshape(ng, b, mb * bs, *rest)
+    flat = arena.reshape(ng, n_pages, bs, -1)
+    out = paged_gather_pages(flat, tables, interpret=interpret)
+    return out.reshape(ng, b, mb * bs, *rest)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "chunked", "softcap",

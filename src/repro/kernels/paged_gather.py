@@ -1,0 +1,58 @@
+"""Paged-KV gather Pallas kernel: block-table page fetch via index_map.
+
+The paged serving engine stores KV in a shared arena of physical pages
+(``serving/kvpool.py``); a decode step needs each sequence's pages laid
+out contiguously. On TPU the natural implementation is *pure DMA
+routing*: the per-sequence block table arrives by scalar prefetch and the
+arena's BlockSpec ``index_map`` reads it to pick which physical page each
+grid step copies — HBM moves exactly one pass over the gathered pages and
+no address math ever touches the VPU. This is the same scalar-prefetch
+pattern the SGMV kernels use to route adapter-homogeneous token blocks.
+
+Grid: (ng, B, MB) — layer-group × sequence × logical block. Invalid
+table entries (-1 padding beyond a sequence's length) route to the
+*last* page via ``table % n_pages`` — the serving arena reserves that
+slot as the trash page, so invalid entries never read a live sequence's
+KV; downstream position masks annihilate whatever they carry.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(tables_ref, arena_ref, out_ref):
+    # the index_map did all the work: this block IS the routed page
+    out_ref[0, 0, 0] = arena_ref[0, 0]
+
+
+def paged_gather_pages(arena: jax.Array, tables: jax.Array, *,
+                       interpret: bool = False) -> jax.Array:
+    """arena: [ng, n_pages, block_size, F]; tables: [B, MB] int32 (may
+    contain -1 → routed to the last/trash page). Returns
+    [ng, B, MB * block_size, F]: each sequence's pages gathered
+    contiguously (trash-page content where the table is -1)."""
+    ng, n_pages, bs, f = arena.shape
+    b, mb = tables.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ng, b, mb),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, bs, f),
+                lambda g, i, j, tbl: (
+                    g, tbl[i, j] % n_pages, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, bs, f), lambda g, i, j, tbl: (g, i, j, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ng, b, mb, bs, f), arena.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), arena)
+    return out.reshape(ng, b, mb * bs, f)

@@ -22,7 +22,6 @@ Kernels are validated in interpret mode on CPU against ``ref.py``.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -23,11 +23,9 @@ transparency; EXPERIMENTS.md documents the discrepancy.
 """
 from __future__ import annotations
 
-import math
 import re
-from typing import Any, Dict, Optional
+from typing import Dict
 
-import jax
 import numpy as np
 
 

@@ -24,7 +24,6 @@ Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
 """
 import argparse
 import json
-import re
 import sys
 import time
 import traceback
@@ -40,8 +39,7 @@ from repro.configs.base import InputShape, ModelConfig
 from repro.core.lora import LoRAMode, resolve_lora_exec
 from repro.distributed.sharding import param_specs, use_mesh
 from repro.launch.analysis import jaxpr_cost, parse_hlo_collectives
-from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
-                               make_production_mesh, roofline_terms)
+from repro.launch.mesh import make_production_mesh, roofline_terms
 from repro.models import build_model
 from repro.training.optimizer import adamw_init
 from repro.training.train import TrainState, make_train_step

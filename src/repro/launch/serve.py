@@ -41,6 +41,20 @@ def main(argv=None) -> int:
                     choices=["auto", "einsum", "sgmv"],
                     help="batched-LoRA compute path (default: the model "
                          "config's 'auto' — sgmv on TPU, einsum elsewhere)")
+    ap.add_argument("--kv-backend", default=None,
+                    choices=["dense", "paged"],
+                    help="KV cache layout (default: the model config's, "
+                         "'dense'). 'dense' reserves a max-ctx ring per "
+                         "slot; 'paged' shares one block arena across "
+                         "slots via per-sequence block tables — same "
+                         "token streams, strictly better capacity under "
+                         "skewed context lengths")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per KV page (paged backend)")
+    ap.add_argument("--kv-arena-blocks", type=int, default=None,
+                    help="KV arena pages (paged backend; default sizes "
+                         "the arena to dense-equivalent capacity — set "
+                         "lower to overcommit)")
     ap.add_argument("--no-prefill-batching", dest="prefill_batching",
                     action="store_false",
                     help="one B=1 prefill per slot (pre-batching baseline)")
@@ -70,6 +84,8 @@ def main(argv=None) -> int:
         max_ctx=args.max_ctx, prompt_buckets=(32, 64),
         memory_budget=args.memory_budget, cache_policy=args.cache_policy,
         lora_backend=args.lora_backend,
+        kv_backend=args.kv_backend, kv_block_size=args.kv_block_size,
+        kv_arena_blocks=args.kv_arena_blocks,
         prefill_batching=args.prefill_batching,
         router_batching=args.router_batching, seed=args.seed)
     try:
@@ -78,7 +94,8 @@ def main(argv=None) -> int:
         print(f"OOM: {e}")
         return 2
     summary = engine.serve(trace)
-    print(f"# lora_backend={engine.lora_backend}", file=sys.stderr)
+    print(f"# lora_backend={engine.lora_backend} "
+          f"kv_backend={engine.kv_backend}", file=sys.stderr)
     if args.json:
         print(json.dumps(summary.__dict__, default=float, indent=2))
     else:
@@ -89,7 +106,7 @@ def main(argv=None) -> int:
               f"first_token={summary.avg_first_token:.3f}s "
               f"slo={summary.slo_attainment:.1%} "
               f"hit_rate={summary.cache_hit_rate:.1%} "
-              f"{summary.batching_row()}")
+              f"{summary.batching_row()} {summary.kv_row()}")
     return 0
 
 

@@ -18,7 +18,6 @@ Design notes (TPU adaptation, see DESIGN.md §2):
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -27,7 +26,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.lora import LoRAMode
 from repro.distributed.sharding import logical_constraint
-from repro.models.layers import linear, rmsnorm, rmsnorm_init, truncated_normal_init
+from repro.models.layers import linear, rmsnorm, truncated_normal_init
 
 NEG_INF = -1e30
 

@@ -12,14 +12,13 @@ table; noted in DESIGN.md §8.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.lora import LoRAMode, init_lora_pair
-from repro.distributed.sharding import logical_constraint
 from repro.models import attention as attn_lib
 from repro.models.layers import layernorm, layernorm_init, linear, mlp, mlp_init
 

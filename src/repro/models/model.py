@@ -179,6 +179,41 @@ class Model:
                                                 lora, lora_mode)
         return self.logits(params, h), cache
 
+    def decode_step_paged(self, params: Dict, tokens: jax.Array,
+                          cache: Dict, tables: jax.Array,
+                          lengths: jax.Array, prompt_lens: jax.Array,
+                          pad_lens: jax.Array, pos: jax.Array,
+                          lora: Optional[Dict] = None,
+                          lora_mode: LoRAMode = LoRAMode(), *,
+                          meta, page_gather=None) -> Tuple[jax.Array, Dict]:
+        """Decode step attending through per-sequence KV block tables.
+
+        ``cache`` is the paged cache (attention nodes are page arenas,
+        see ``serving/kvpool.py``; SSM/cross state stays per-slot dense).
+        tables: [B, max_blocks] int32 physical pages per row (-1 padded,
+        all -1 for inactive rows); lengths: [B] tokens already written
+        (the row's ``slot.pos``); prompt_lens/pad_lens: [B] real prompt
+        length and padded prefill bucket (the dense ring is a function
+        of all three — ``kvpool.dense_ring_positions``); pos: [B] this
+        step's write position. The step gathers the dense ring view the
+        block tables describe, runs the ordinary ``decode_step`` on it
+        (so every policy, LoRA backend, and cache-quant variant is
+        covered by one code path and token streams stay bit-identical to
+        ``kv_backend='dense'``), and scatters the freshly written ring
+        entries back into their pages. ``meta`` is a hashable
+        ``kvpool.PagedMeta`` (close over it under jit); ``page_gather``
+        optionally routes the page fetch through
+        ``kernels/ops.paged_gather`` where the DMA-routing kernel pays.
+        """
+        from repro.serving import kvpool  # deferred: engine→models cycle
+
+        view = kvpool.paged_view(cache, tables, lengths, prompt_lens,
+                                 pad_lens, meta, page_gather=page_gather)
+        logits, view = self.decode_step(params, tokens, view, pos, lora,
+                                        lora_mode)
+        cache = kvpool.scatter_decode(cache, view, tables, pos, meta)
+        return logits, cache
+
 
 def _invalidate_past(cache: Dict, lengths: jax.Array) -> Dict:
     """Set stored cache positions ≥ length (right-pad writes) to -1.

@@ -18,7 +18,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, SSMConfig
+from repro.configs.base import ModelConfig
 from repro.core.lora import LoRAMode
 from repro.distributed.sharding import logical_constraint
 from repro.models.layers import linear, rmsnorm, truncated_normal_init

@@ -20,9 +20,8 @@ Caches use the same slot layout; attention slots carry ring-buffer KV
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +32,7 @@ from repro.distributed.sharding import logical_constraint
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
-from repro.models.layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from repro.models.layers import mlp, mlp_init, rmsnorm
 
 
 # ---------------------------------------------------------------------------

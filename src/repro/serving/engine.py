@@ -46,6 +46,23 @@ the TPU serving path; interpret mode off-TPU), 'einsum' through the
 gather-einsum reference (the CPU default). Numerics agree across
 backends; ``benchmarks/batched_lora_micro.py`` reports the deltas.
 
+KV memory backend: ``EngineConfig.kv_backend`` ('dense' | 'paged',
+``None`` falling back to ``ModelConfig.kv_backend``) selects the KV
+cache layout. 'dense' reserves a ``max_ctx`` ring per slot — simple,
+but short-context tenants strand the memory long-context tenants need.
+'paged' unifies the slots over one ``serving/kvpool.py`` block arena
+(``kv_arena_blocks`` pages of ``kv_block_size`` tokens; default: the
+dense-equivalent capacity): sequences hold exactly the pages their
+lengths need, block tables route every jit'd gather/scatter
+(``models.Model.decode_step_paged``), an exhausted arena defers
+admissions and, mid-decode, LIFO-preempts the youngest slot
+(restart-recompute) instead of crashing, and completions return their
+pages. Token streams are bit-identical between the two backends under
+every policy — the paged view reconstructs exactly the dense ring
+layout — so 'paged' is purely a capacity/scheduling change
+(``benchmarks/paged_kv.py`` measures the concurrency win at fixed
+arena bytes; ``ServingSummary.kv_stats`` reports arena accounting).
+
 Scheduler policies:
 
 * ``edgelora``          — full system (adaptive adapter selection ON)
@@ -60,8 +77,9 @@ Scheduler policies:
 """
 from __future__ import annotations
 
+import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -74,6 +92,8 @@ from repro.core.lora import LoRAMode, resolve_lora_exec
 from repro.core.router import OracleRouter, select_adapter
 from repro.core.slots import Request, Slot, SlotManager, SlotState
 from repro.models import build_model
+from repro.serving import kvpool as kvlib
+from repro.serving.kvpool import PagedKVPool
 from repro.serving.metrics import ServingSummary, summarize
 
 
@@ -99,6 +119,23 @@ class EngineConfig:
     # prefill_batching benchmark and determinism tests compare against)
     prefill_batching: bool = True
     router_batching: bool = True
+    # KV memory layout: 'dense' keeps a max_ctx ring per slot (reference
+    # path), 'paged' shares one block arena across slots with
+    # per-sequence block tables; None defers to ModelConfig.kv_backend.
+    # Token streams are bit-identical across the two — paged only changes
+    # *capacity*: short contexts stop reserving max_ctx of KV, and an
+    # exhausted arena defers admissions / preempts the youngest slot
+    # (LIFO, restart-recompute) instead of crashing.
+    kv_backend: Optional[str] = None
+    kv_block_size: int = 16          # tokens per KV page
+    # arena pages; None → dense-equivalent capacity (n_slots rings'
+    # worth), the setting under which paged must reproduce dense exactly.
+    # Smaller values overcommit: more slots than the worst case fits.
+    kv_arena_blocks: Optional[int] = None
+    # route the paged page-fetch through kernels/ops.paged_gather
+    # (None → only where it pays: real TPU; True forces interpret mode
+    # off-TPU for parity testing)
+    kv_gather_kernel: Optional[bool] = None
     disk_bandwidth: float = 1.0e9    # adapter swap-in bytes/s (host->HBM)
     mem_bandwidth: float = 60.0e9    # merge/unmerge traffic (llama.cpp mode)
     memory_budget: float = 6.0e9     # adapter memory budget (llamacpp preload)
@@ -121,6 +158,13 @@ class EdgeLoRAEngine:
         # concrete batched-LoRA backend for this process ('einsum'|'sgmv')
         self.lora_backend, self._sgmv_interpret = resolve_lora_exec(
             engine_cfg.lora_backend or cfg.lora_backend)
+        # KV layout: EngineConfig overrides ModelConfig (same contract as
+        # lora_backend); 'paged' swaps per-slot rings for the block arena
+        self.kv_backend = engine_cfg.kv_backend or cfg.kv_backend
+        if self.kv_backend not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_backend {self.kv_backend!r} "
+                             "(expected 'dense' or 'paged')")
+        self.paged = self.kv_backend == "paged"
         # buckets cover max_ctx so no prompt that fits the KV capacity is
         # ever silently truncated by _padded_prompt
         self._buckets = tuple(sorted(
@@ -232,8 +276,65 @@ class EdgeLoRAEngine:
                 gcache, bcache)
 
         self._write_slots = jax.jit(write_slots)
-        self.cache = self.model.init_cache(self.ecfg.n_slots,
-                                           self.ecfg.max_ctx)
+        if not self.paged:
+            self.cache = self.model.init_cache(self.ecfg.n_slots,
+                                               self.ecfg.max_ctx)
+            return
+
+        # ---- paged KV: shared page arena + per-sequence block tables --
+        ecfg = self.ecfg
+        bs = ecfg.kv_block_size
+        template = self.model.init_cache(ecfg.n_slots, ecfg.max_ctx)
+        per_seq = -(-(ecfg.max_ctx + 1) // bs)  # worst-case one-seq pages
+        n_blocks = (ecfg.kv_arena_blocks if ecfg.kv_arena_blocks
+                    else ecfg.n_slots * per_seq)
+        if n_blocks < per_seq:
+            raise ValueError(
+                f"kv_arena_blocks={n_blocks} cannot hold one max_ctx="
+                f"{ecfg.max_ctx} sequence ({per_seq} blocks of {bs}): "
+                "a lone request could never complete")
+        meta = kvlib.paged_meta(template, n_blocks, bs, ecfg.max_ctx)
+        self._kv_meta = meta
+        self.kvpool = PagedKVPool(n_blocks, bs)
+        self.cache = kvlib.build_arena(template, meta)
+        use_kernel = ecfg.kv_gather_kernel
+        if use_kernel is None:  # only where it pays: real TPU
+            use_kernel = jax.default_backend() == "tpu"
+        page_gather = None
+        if use_kernel:
+            from repro.kernels.ops import paged_gather
+            page_gather = functools.partial(
+                paged_gather, interpret=jax.default_backend() != "tpu",
+                use_kernel=True)
+
+        def paged_decode_fn(params, pool, tokens, cache, tables, lengths,
+                            prompt_lens, pad_lens, pos, slot_ids):
+            mode = LoRAMode("batched", slot_ids, scale, backend, interpret)
+            logits, cache = model.decode_step_paged(
+                params, tokens, cache, tables, lengths, prompt_lens,
+                pad_lens, pos, pool, mode,
+                meta=meta, page_gather=page_gather)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        def paged_decode_merged(params, tokens, cache, tables, lengths,
+                                prompt_lens, pad_lens, pos):
+            logits, cache = model.decode_step_paged(
+                params, tokens, cache, tables, lengths, prompt_lens,
+                pad_lens, pos,
+                meta=meta, page_gather=page_gather)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        def paged_write(gcache, bcache, tables, lengths, pad_lens,
+                        slot_idx):
+            # the paged analogue of write_slots: attention leaves land in
+            # their sequences' pages, per-slot leaves (SSM state) keep
+            # the dense slot scatter
+            return kvlib.scatter_prefill(gcache, bcache, tables, lengths,
+                                         pad_lens, slot_idx, meta)
+
+        self._decode_paged = jax.jit(paged_decode_fn)
+        self._decode_merged_paged = jax.jit(paged_decode_merged)
+        self._paged_write = jax.jit(paged_write)
 
     def _fresh_cache(self, batch: int):
         """Zeroed prefill cache for one batch group (no persistent
@@ -318,15 +419,27 @@ class EdgeLoRAEngine:
         self.decode_steps = 0
         self.router_steps = 0
         self.prefill_batch_hist: Dict[int, int] = {}
+        # paged-KV scheduling state: requests bounced back by a dry arena
+        # (admission deferrals leave the queue untouched; decode-time
+        # preemptions land here and re-admit ahead of new arrivals)
+        self._requeue: List[Request] = []
+        self._admit_counter = 0
+        self.kv_deferrals = 0
+        self.kv_preemptions = 0
+        self.peak_active_slots = 0
         active_adapter: Optional[int] = None  # llamacpp single-active mode
         dlora_mode = "unmerged"               # dlora dynamic mode
         dlora_merged_adapter: Optional[int] = None
 
         def dlora_desired():
             """Look ahead over the next window of pending requests: merge
-            when the queue is dominated by few adapters (dLoRA §3)."""
+            when the queue is dominated by few adapters (dLoRA §3).
+            Requeued (KV-preempted) work re-admits first, so it leads the
+            window — otherwise a drained queue could leave merged mode
+            folded on an adapter the requeue can never match."""
             ahead = [r.true_adapter for r in
-                     queue[qi:qi + ecfg.dlora_window]]
+                     (self._requeue + queue[qi:qi + ecfg.dlora_window])
+                     [:ecfg.dlora_window]]
             if not ahead:
                 return dlora_mode, dlora_merged_adapter
             uniq = set(ahead)
@@ -337,7 +450,8 @@ class EdgeLoRAEngine:
             return "unmerged", None
 
         def arrivals_ready():
-            return qi < len(queue) and queue[qi].arrival_time <= now
+            return bool(self._requeue) or (
+                qi < len(queue) and queue[qi].arrival_time <= now)
 
         while len(completed) < len(queue):
             if max_sim_time is not None and now > max_sim_time:
@@ -363,10 +477,22 @@ class EdgeLoRAEngine:
                         dlora_mode, dlora_merged_adapter = (want_mode,
                                                             want_adapter)
             while idle and arrivals_ready():
-                req = queue[qi]
+                from_requeue = bool(self._requeue)
+                req = self._requeue[0] if from_requeue else queue[qi]
                 if ecfg.policy == "dlora" and dlora_mode == "merged" \
                         and req.true_adapter != dlora_merged_adapter:
                     break  # merged mode serves only the folded adapter
+                if self.paged and not self.kvpool.can_allocate(
+                        req.prompt_len + 1):
+                    # KV arena exhausted: OutOfBlocks feeds the same
+                    # deferral discipline as adapter-pool exhaustion —
+                    # leave the request queued and retry once a
+                    # completion (or preemption) frees pages. Checked
+                    # *before* any merge-cost accounting so a deferred
+                    # admission charges nothing. +1: the first decode
+                    # write must never OOM right after admission.
+                    self.kv_deferrals += 1
+                    break
                 if ecfg.policy == "llamacpp":
                     want = req.true_adapter
                     if active_adapter is None:
@@ -381,8 +507,20 @@ class EdgeLoRAEngine:
                         active_adapter = want
                 slot = idle.pop()
                 slot.assign(req)
-                qi += 1
+                slot.admit_seq = self._admit_counter
+                self._admit_counter += 1
+                if self.paged:
+                    self.kvpool.register(req.request_id)
+                    self.kvpool.append_tokens(req.request_id,
+                                              req.prompt_len)
+                if from_requeue:
+                    self._requeue.pop(0)
+                else:
+                    qi += 1
                 progressed = True
+            self.peak_active_slots = max(
+                self.peak_active_slots,
+                sum(s.state != SlotState.IDLE for s in self.slots.slots))
 
             # ---- adapter selection (Algorithm 1) ---------------------
             # batched router scoring: every SELECTING slot that needs a
@@ -518,6 +656,12 @@ class EdgeLoRAEngine:
 
             # ---- batched decode (Batch LoRA Inference) ----------------
             gen = self.slots.in_state(SlotState.GENERATE)
+            if gen and self.paged:
+                # allocate this step's page per sequence up front; a dry
+                # arena preempts the youngest admission (LIFO restart —
+                # greedy decode recomputes the identical stream later)
+                gen = self._secure_decode_blocks(gen)
+                progressed = True  # preemption alone is progress
             if gen:
                 tokens = np.zeros((ecfg.n_slots,), np.int32)
                 pos = np.zeros((ecfg.n_slots,), np.int32)
@@ -529,7 +673,22 @@ class EdgeLoRAEngine:
                 merged_step = (ecfg.policy == "llamacpp"
                                or (ecfg.policy == "dlora"
                                    and dlora_mode == "merged"))
-                if merged_step:
+                if self.paged:
+                    tables, lengths, plens, bwlens = \
+                        self._decode_tables(gen)
+                    if merged_step:
+                        (next_toks, self.cache), dt = self._timed(
+                            ("decode_merged",), self._decode_merged_paged,
+                            self.params, jnp.asarray(tokens), self.cache,
+                            tables, lengths, plens, bwlens,
+                            jnp.asarray(pos))
+                    else:
+                        (next_toks, self.cache), dt = self._timed(
+                            ("decode",), self._decode_paged, self.params,
+                            self.lora_pool, jnp.asarray(tokens),
+                            self.cache, tables, lengths, plens, bwlens,
+                            jnp.asarray(pos), jnp.asarray(sids))
+                elif merged_step:
                     (next_toks, self.cache), dt = self._timed(
                         ("decode_merged",), self._decode_merged,
                         self.params, jnp.asarray(tokens), self.cache,
@@ -554,17 +713,30 @@ class EdgeLoRAEngine:
                         if ecfg.policy != "llamacpp" \
                                 and not slot.merged:
                             self.manager.unpin(req.selected_adapter)
+                        if self.paged:
+                            self.kvpool.release(req.request_id)
                         completed.append(slot.release())
                 progressed = True
 
             # ---- idle: jump to next arrival ---------------------------
             if not progressed:
+                if self._requeue:
+                    continue  # unreachable in practice: requeued work
+                    # re-admits (or an active slot progresses) next tick
                 if qi < len(queue):
                     now = max(now, queue[qi].arrival_time)
                 else:
                     break
 
         duration = max(now, 1e-9)
+        kv_stats = None
+        if self.paged:
+            kv_stats = {"backend": "paged",
+                        "n_blocks": self.kvpool.n_blocks,
+                        "block_size": self.kvpool.block_size,
+                        **self.kvpool.stats.as_dict(),
+                        "deferrals": self.kv_deferrals,
+                        "preemptions": self.kv_preemptions}
         return summarize(queue, duration, ecfg.slo_seconds,
                          cache_stats=self.manager.stats,
                          energy_proxy=self.busy_time / duration,
@@ -574,6 +746,8 @@ class EdgeLoRAEngine:
                              "router_steps": self.router_steps,
                              "prefill_batch_hist": dict(
                                  self.prefill_batch_hist),
+                             "peak_active_slots": self.peak_active_slots,
+                             "kv_stats": kv_stats,
                          })
 
     def _prefill_group(self, bucket: int, merged: bool, group: List[Slot],
@@ -602,7 +776,19 @@ class EdgeLoRAEngine:
         slot_idx = jnp.asarray(
             np.fromiter((s.index for s in rows), np.int32,
                         count=len(rows)))
-        self.cache = self._write_slots(self.cache, cacheb, slot_idx)
+        if self.paged:
+            # per-row block tables (padded replica rows share the real
+            # row's sequence, so their duplicate page writes are
+            # idempotent exactly like duplicate slot indices)
+            mb = self._kv_meta.max_blocks
+            tables = jnp.asarray(np.stack(
+                [self.kvpool.block_table(s.request.request_id, mb)
+                 for s in rows]))
+            bwlens = jnp.full((len(rows),), bucket, jnp.int32)
+            self.cache = self._paged_write(self.cache, cacheb, tables,
+                                           lengths, bwlens, slot_idx)
+        else:
+            self.cache = self._write_slots(self.cache, cacheb, slot_idx)
         self.prefill_steps += 1
         self.prefill_batch_hist[len(group)] = \
             self.prefill_batch_hist.get(len(group), 0) + 1
@@ -622,3 +808,73 @@ class EdgeLoRAEngine:
         n = min(req.prompt_len, bucket)
         toks[:n] = np.asarray(req.prompt_tokens)[:n]  # right-padded
         return jnp.asarray(toks)
+
+    # ------------------------------------------------------------------
+    # paged-KV scheduling (block tables, preemption)
+    # ------------------------------------------------------------------
+
+    def _decode_tables(self, gen: List[Slot]):
+        """[n_slots, max_blocks] physical page table + [n_slots] written
+        lengths / prompt lengths / prefill buckets for a decode step.
+        Rows of slots not decoding this tick are -1 / 0 — their gathers
+        read the trash page and their writes land there, so they can't
+        corrupt live sequences."""
+        mb = self._kv_meta.max_blocks
+        tables = np.full((self.ecfg.n_slots, mb), -1, np.int32)
+        lengths = np.zeros((self.ecfg.n_slots,), np.int32)
+        plens = np.zeros((self.ecfg.n_slots,), np.int32)
+        bwlens = np.zeros((self.ecfg.n_slots,), np.int32)
+        for slot in gen:
+            tables[slot.index] = self.kvpool.block_table(
+                slot.request.request_id, mb)
+            lengths[slot.index] = slot.pos  # tokens written pre-step
+            plens[slot.index] = slot.request.prompt_len
+            bwlens[slot.index] = slot.bucket  # padded prefill write span
+        return (jnp.asarray(tables), jnp.asarray(lengths),
+                jnp.asarray(plens), jnp.asarray(bwlens))
+
+    def _secure_decode_blocks(self, gen: List[Slot]) -> List[Slot]:
+        """Allocate one page-extension per decoding sequence, oldest
+        admission first. When the arena is dry, preempt the *youngest*
+        active slot (LIFO, vLLM-style restart-recompute): its pages are
+        freed, its request re-enters the queue ahead of new arrivals,
+        and greedy decode later reproduces the identical stream. The
+        init-time capacity check (arena ≥ one max_ctx sequence)
+        guarantees the oldest admission always makes progress."""
+        secured: List[Slot] = []
+        for slot in sorted(gen, key=lambda s: s.admit_seq):
+            if slot.state != SlotState.GENERATE:
+                continue  # preempted as an earlier slot's victim
+            rid = slot.request.request_id
+            alive = True
+            while not self.kvpool.can_append(rid, 1):
+                victims = [s for s in self.slots.slots
+                           if s.state != SlotState.IDLE and s is not slot
+                           and s not in secured]
+                if victims:
+                    self._preempt(max(victims, key=lambda s: s.admit_seq))
+                else:
+                    self._preempt(slot)
+                    alive = False
+                    break
+            if alive:
+                self.kvpool.append_tokens(rid, 1)
+                secured.append(slot)
+        return [s for s in gen if s in secured]
+
+    def _preempt(self, slot: Slot) -> None:
+        """Evict an in-flight request to free its KV pages: restart
+        semantics — all partial output is discarded and the request
+        re-admits (and re-prefills) once capacity returns."""
+        req = slot.request
+        self.kvpool.release(req.request_id)
+        if self.ecfg.policy != "llamacpp" and not slot.merged \
+                and slot.state in (SlotState.PREFILL, SlotState.GENERATE):
+            self.manager.unpin(req.selected_adapter)
+        req.selected_adapter = None
+        req.first_token_time = None
+        req.generated = 0
+        req.tokens = []
+        slot.release()
+        self._requeue.append(req)
+        self.kv_preemptions += 1

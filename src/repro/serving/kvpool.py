@@ -9,17 +9,34 @@ This lets γ slots share one arena sized for the *expected* total context
 instead of γ × max_ctx — the overcommit that makes large-γ serving fit on
 a small device.
 
-Host-side manager (allocation is a scheduling concern); the device-side
-face is a gather by block table (``gather_kv``, pure-jnp reference used
-by tests — the TPU path would fold the page gather into the flash-decode
-index_map exactly like the SGMV scalar-prefetch pattern).
+Two faces:
+
+* **Host side** (``PagedKVPool``): the numpy block allocator. Allocation
+  is a scheduling concern — the engine registers/extends/releases
+  sequences between jit'd steps and only ships int32 block tables to the
+  device.
+* **Device side** (``build_arena`` / ``paged_view`` / ``scatter_prefill``
+  / ``scatter_decode``): jit-safe jnp gather/scatter over a fixed arena
+  of KV pages. ``paged_view`` reconstructs, from block tables + lengths
+  alone, exactly the dense ring-cache layout ``models/attention.py``
+  decodes over — same shapes, same stored values, same position masks —
+  so the paged engine produces bit-identical token streams to the dense
+  one. Invalid rows/positions route through a trailing *trash block*
+  (physical block ``n_blocks``), keeping every scatter dense and
+  mask-free. On TPU the page gather folds into a scalar-prefetch
+  index_map (``kernels/ops.paged_gather``) exactly like the SGMV pattern.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import asdict, dataclass
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
+
+try:  # device-side face; the numpy allocator stays importable without jax
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover - container always has jax
+    jnp = None
 
 
 class OutOfBlocksError(RuntimeError):
@@ -31,6 +48,12 @@ class KVPoolStats:
     allocs: int = 0
     frees: int = 0
     peak_used: int = 0
+    # allocation requests that hit an empty free list (each is either an
+    # admission deferral or a decode-time preemption upstream)
+    oom_events: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return asdict(self)
 
 
 class PagedKVPool:
@@ -50,6 +73,23 @@ class PagedKVPool:
     @property
     def used_blocks(self) -> int:
         return self.n_blocks - len(self.free)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self.free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        """Would registering a fresh sequence of ``n_tokens`` succeed?
+        (Admission gate: check *before* registering so a refusal leaves
+        no table behind.)"""
+        return self.blocks_for(n_tokens) <= len(self.free)
+
+    def can_append(self, seq_id: int, n: int = 1) -> bool:
+        needed = self.blocks_for(self.lengths[seq_id] + n)
+        return needed - len(self.tables[seq_id]) <= len(self.free)
 
     def register(self, seq_id: int) -> None:
         assert seq_id not in self.tables, seq_id
@@ -71,6 +111,7 @@ class PagedKVPool:
         n_new = needed - len(table)
         if n_new > len(self.free):
             # all-or-nothing: never leave a partially-extended table
+            self.stats.oom_events += 1
             raise OutOfBlocksError(
                 f"KV arena exhausted: need {n_new} blocks, "
                 f"{len(self.free)} free of {self.n_blocks} × "
@@ -122,3 +163,279 @@ def gather_kv(arena: np.ndarray, table: np.ndarray, length: int
     pages = arena[table[:n]]                       # [n, block_size, ...]
     flat = pages.reshape(-1, *arena.shape[2:])
     return flat[:length]
+
+
+# ---------------------------------------------------------------------------
+# jax-native arena: jit-safe block-table gather/scatter over the model cache
+# ---------------------------------------------------------------------------
+#
+# The model's dense cache is a pytree whose *attention nodes* are dicts
+# {'k', 'v'[, 'k_scale', 'v_scale'], 'pos'} with leaves shaped
+# [ng, B, clen, ...] (layer-group stack leading, batch at axis 1, ring
+# length clen at axis 2). The paged arena replaces each such node by
+# {'k', 'v', ...} leaves shaped [ng, n_blocks + 1, block_size, ...] —
+# one shared physical page pool per leaf, block ``n_blocks`` being the
+# trash page — and drops 'pos' entirely: ring positions are a pure
+# function of per-sequence lengths, so the view recomputes them. All
+# non-attention leaves (SSM conv/state, cross-attn K/V) keep their dense
+# per-slot [ng, B, ...] layout: their state is O(1) per sequence, paging
+# buys nothing.
+
+
+class PagedMeta(NamedTuple):
+    """Static description of a paged cache (hashable → safe to close over
+    in jit'd functions)."""
+
+    attn_paths: Tuple[Tuple[Tuple[str, ...], int], ...]  # ((path, clen), ...)
+    block_size: int
+    n_blocks: int          # real blocks; arena leaves carry n_blocks + 1
+    # block-table width: covers logical positions up to max_len
+    # *inclusive* — a prompt_len == max_len request's one decode write
+    # lands at position max_len (the dense ring wraps; pages just extend)
+    max_blocks: int
+
+    @property
+    def trash_block(self) -> int:
+        return self.n_blocks
+
+
+def _is_attn_node(node: Any) -> bool:
+    return isinstance(node, dict) and "k" in node and "pos" in node
+
+
+def attn_node_paths(cache: Dict) -> Tuple[Tuple[Tuple[str, ...], int], ...]:
+    """(path, clen) for every attention node in a dense cache template."""
+    out: List[Tuple[Tuple[str, ...], int]] = []
+
+    def walk(node, path):
+        if _is_attn_node(node):
+            out.append((path, node["k"].shape[-3]))
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], path + (k,))
+
+    walk(cache, ())
+    return tuple(out)
+
+
+def paged_meta(cache: Dict, n_blocks: int, block_size: int,
+               max_len: int) -> PagedMeta:
+    """``max_len``: longest logical position a sequence can reach
+    (the engine's max_ctx; block tables are sized to hold position
+    max_len itself — see ``PagedMeta.max_blocks``)."""
+    max_blocks = -(-(max_len + 1) // block_size)
+    return PagedMeta(attn_node_paths(cache), block_size, n_blocks,
+                     max_blocks)
+
+
+def _node_at(tree: Dict, path: Tuple[str, ...]) -> Any:
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _replace_at(tree: Dict, path: Tuple[str, ...], value: Any) -> Dict:
+    """Functionally replace the subtree at ``path`` (shallow copies)."""
+    if not path:
+        return value
+    out = dict(tree)
+    out[path[0]] = _replace_at(tree[path[0]], path[1:], value)
+    return out
+
+
+def build_arena(cache: Dict, meta: PagedMeta) -> Dict:
+    """Dense cache template → paged cache: attention nodes become page
+    arenas [ng, n_blocks + 1, block_size, ...] (zeroed; + trash block),
+    everything else is kept as-is (per-slot dense state)."""
+    out = cache
+    for path, _clen in meta.attn_paths:
+        node = _node_at(cache, path)
+        arena_node = {}
+        for key, leaf in node.items():
+            if key == "pos":
+                continue
+            ng = leaf.shape[0]
+            rest = leaf.shape[3:]
+            arena_node[key] = jnp.zeros(
+                (ng, meta.n_blocks + 1, meta.block_size, *rest), leaf.dtype)
+        out = _replace_at(out, path, arena_node)
+    return out
+
+
+def ring_view_positions(lengths, clen: int):
+    """[B, clen] logical position stored at each ring index, or -1.
+
+    Reproduces the dense ring-buffer invariant: after writing positions
+    0..L-1 with ``idx = pos % clen``, ring index c holds the *largest*
+    p < L with p ≡ c (mod clen) — or nothing (-1) if no such p exists.
+    """
+    lengths = jnp.asarray(lengths, jnp.int32)
+    c = jnp.arange(clen, dtype=jnp.int32)[None, :]         # [1, clen]
+    last = lengths[:, None] - 1                            # [B, 1]
+    base = (last // clen) * clen + c                       # ≡ c (mod clen)
+    p = jnp.where(base > last, base - clen, base)
+    return jnp.where((lengths[:, None] > 0) & (p >= 0), p, -1)
+
+
+def dense_ring_positions(lengths, prompt_lens, pad_lens, clen: int):
+    """[B, clen] position each dense ring index shows *mid-serving*.
+
+    The dense engine's write history per sequence is NOT a prefix: the
+    prefill bulk-write covers the padded bucket [0, bw) (right-pad rows
+    overwrite earlier prompt entries whose ring index they share — those
+    entries are then invalidated, not restored), and decode appends
+    [L, cur) on top. Ring index c therefore shows:
+
+    * the largest decode-written p ∈ [L, cur) with p ≡ c — decode wrote
+      last, so it wins; else
+    * the largest prefill-written p ∈ [0, bw) with p ≡ c, *valid only if
+      p < L* (pad writes carry pos = -1); else
+    * nothing (-1).
+
+    The paged view must reproduce this exactly — deriving positions from
+    ``cur`` alone would resurrect prompt entries the dense ring lost to
+    pad overwrites (window-local layers with clen < bucket) and streams
+    would diverge.
+    """
+    q = ring_view_positions(lengths, clen)                 # latest ≤ cur-1
+    ppre = ring_view_positions(pad_lens, clen)             # prefill pattern
+    lp = jnp.asarray(prompt_lens, jnp.int32)[:, None]
+    return jnp.where(q >= lp, q,
+                     jnp.where((ppre >= 0) & (ppre < lp), ppre, -1))
+
+
+def _page_coords(meta: PagedMeta, tables, positions):
+    """(block, offset) arrays for logical ``positions`` (any shape with
+    leading batch); invalid positions (or -1 table rows) → trash block."""
+    pc = jnp.maximum(positions, 0)
+    blk = jnp.take_along_axis(tables, pc // meta.block_size, axis=1)
+    blk = jnp.where((positions >= 0) & (blk >= 0), blk, meta.trash_block)
+    return blk, pc % meta.block_size
+
+
+def paged_view(arena_cache: Dict, tables, lengths, prompt_lens, pad_lens,
+               meta: PagedMeta,
+               page_gather: Optional[Callable] = None) -> Dict:
+    """Reconstruct the dense ring-cache view a decode step attends over.
+
+    tables: [B, max_blocks] int32 physical block table per row (-1 padded;
+    all -1 for inactive rows); lengths: [B] tokens written so far (cur);
+    prompt_lens/pad_lens: [B] real prompt length and padded prefill
+    bucket (see ``dense_ring_positions`` — the dense ring is a function
+    of all three). The returned tree has exactly the dense cache's
+    shapes/dtypes: values bit-identical at every valid ring index, 'pos'
+    recomputed (invalid indices carry -1, so downstream masks see the
+    dense layout). With ``page_gather`` (e.g. ``kernels/ops.
+    paged_gather``) the page fetch runs through the kernel and the ring
+    select picks within contiguous pages; both routes agree at every
+    valid (unmasked) ring index.
+    """
+    out = arena_cache
+    for path, clen in meta.attn_paths:
+        node = _node_at(arena_cache, path)
+        p = dense_ring_positions(lengths, prompt_lens, pad_lens, clen)
+        view: Dict[str, Any] = {}
+        if page_gather is None:
+            blk, off = _page_coords(meta, tables, p)
+            for key, leaf in node.items():
+                view[key] = leaf[:, blk, off]              # [ng, B, clen, ...]
+        else:
+            pc = jnp.maximum(p, 0)
+            valid = (p >= 0)[None, :, :]
+            for key, leaf in node.items():
+                pages = page_gather(leaf, tables)  # [ng, B, MB*bs, ...]
+                idx = pc[None, :, :]
+                idx = idx.reshape(*idx.shape,
+                                  *(1,) * (pages.ndim - 3))
+                got = jnp.take_along_axis(
+                    pages, jnp.broadcast_to(
+                        idx, (*pages.shape[:2], clen, *pages.shape[3:])),
+                    axis=2)
+                mask = valid.reshape(*valid.shape,
+                                     *(1,) * (got.ndim - 3))
+                view[key] = jnp.where(mask, got, 0).astype(leaf.dtype)
+        ng = node["k"].shape[0]
+        view["pos"] = jnp.broadcast_to(p[None], (ng, *p.shape))
+        out = _replace_at(out, path, view)
+    return out
+
+
+def scatter_prefill(arena_cache: Dict, mini_cache: Dict, tables, lengths,
+                    pad_lens, slot_idx, meta: PagedMeta) -> Dict:
+    """Land a batched-prefill group's fresh cache into the paged cache.
+
+    Attention nodes: the mini cache's ring was bulk-written with the
+    *padded* positions [0, bw), so ring index c holds position
+    ``ring_view_positions(bw)[c]``; entries that are real prompt tokens
+    (p < length) scatter to their pages, pad entries (and -1 table rows)
+    land in the trash block — the page arena holds exactly what the
+    dense ring kept. Positions are distinct per row and rows own
+    disjoint blocks, so writes never collide; replica rows from
+    power-of-two group padding share a table and rewrite identical data
+    — idempotent exactly like the dense slot scatter. Non-attention
+    leaves keep the dense per-slot scatter at ``slot_idx``.
+    """
+    out = arena_cache
+    attn = dict(meta.attn_paths)
+    lengths_b = jnp.asarray(lengths, jnp.int32)[:, None]
+
+    def walk(anode, mnode, path):
+        nonlocal out
+        if path in attn:
+            clen = attn[path]
+            p = ring_view_positions(pad_lens, clen)        # [B, clen]
+            p = jnp.where(p < lengths_b, p, -1)            # pads → trash
+            blk, off = _page_coords(meta, tables, p)
+            new_node = {}
+            for key, leaf in anode.items():
+                mini = mnode[key]                          # [ng, B, clen, ...]
+                new_node[key] = leaf.at[:, blk, off].set(
+                    mini.astype(leaf.dtype))
+            out = _replace_at(out, path, new_node)
+        elif isinstance(anode, dict):
+            for k in anode:
+                walk(anode[k], mnode[k], path + (k,))
+        else:
+            # dense per-slot leaf (SSM conv/state, cross K/V): batch at
+            # axis 1, same idempotent duplicate-row semantics
+            out = _replace_at(
+                out, path, anode.at[:, slot_idx].set(mnode.astype(anode.dtype)))
+
+    walk(arena_cache, mini_cache, ())
+    return out
+
+
+def scatter_decode(arena_cache: Dict, view_cache: Dict, tables, pos,
+                   meta: PagedMeta) -> Dict:
+    """Persist one decode step: each row's freshly written ring entry
+    (index ``pos % clen`` — where ``cache_update`` just wrote it) moves
+    from the view into its page; non-attention leaves (recurrent SSM
+    state) replace wholesale. Inactive rows (-1 tables) hit the trash
+    block, and their junk SSM state lands in rows a future prefill
+    overwrites — matching the dense engine exactly."""
+    out = arena_cache
+    attn = dict(meta.attn_paths)
+    pos = jnp.asarray(pos, jnp.int32)
+    rows = jnp.arange(pos.shape[0])
+
+    def walk(anode, vnode, path):
+        nonlocal out
+        if path in attn:
+            clen = attn[path]
+            blk, off = _page_coords(meta, tables, pos[:, None])
+            blk, off = blk[:, 0], off[:, 0]                # [B]
+            ridx = pos % clen
+            new_node = {}
+            for key, leaf in anode.items():
+                written = vnode[key][:, rows, ridx]        # [ng, B, ...]
+                new_node[key] = leaf.at[:, blk, off].set(
+                    written.astype(leaf.dtype))
+            out = _replace_at(out, path, new_node)
+        elif isinstance(anode, dict):
+            for k in anode:
+                walk(anode[k], vnode[k], path + (k,))
+        else:
+            out = _replace_at(out, path, vnode.astype(anode.dtype))
+
+    walk(arena_cache, view_cache, ())
+    return out

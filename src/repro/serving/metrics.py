@@ -36,6 +36,14 @@ class ServingSummary:
     # prefill group size -> #groups (real occupancy, before the engine
     # pads groups to power-of-two batch shapes)
     prefill_batch_hist: Optional[Dict[int, int]] = None
+    # most slots simultaneously non-IDLE during the run (the concurrency
+    # the paged-KV benchmark compares at fixed arena bytes)
+    peak_active_slots: Optional[int] = None
+    # paged-KV arena accounting (kv_backend='paged' only): KVPoolStats
+    # fields plus arena geometry and the engine's deferral/preemption
+    # counts — {backend, n_blocks, block_size, allocs, frees, peak_used,
+    # oom_events, deferrals, preemptions}
+    kv_stats: Optional[Dict] = None
 
     def row(self) -> Dict[str, float]:
         return {k: getattr(self, k) for k in (
@@ -51,6 +59,17 @@ class ServingSummary:
         return (f"pf_steps={self.prefill_steps};"
                 f"router_steps={self.router_steps};"
                 f"dec_steps={self.decode_steps};pf_hist={hist or 'n/a'}")
+
+    def kv_row(self) -> str:
+        """Compact KV-arena digest (same single-CSV-column contract as
+        ``batching_row``); 'kv=dense' when the run wasn't paged."""
+        kv = self.kv_stats
+        if not kv:
+            return f"kv=dense;peak_active={self.peak_active_slots}"
+        return (f"kv=paged;blocks={kv['n_blocks']}x{kv['block_size']};"
+                f"peak_blocks={kv['peak_used']};"
+                f"defer={kv['deferrals']};preempt={kv['preemptions']};"
+                f"peak_active={self.peak_active_slots}")
 
 
 def summarize(requests: List[Request], duration: float,

@@ -9,7 +9,7 @@ traffic (high locality). Input/output lengths are uniform in [Il, Iu] /
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

@@ -9,7 +9,7 @@ checkpoints (the paper's swap source).
 from __future__ import annotations
 
 import os
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

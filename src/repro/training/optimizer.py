@@ -6,8 +6,7 @@ inherit the param's PartitionSpec under GSPMD propagation).
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

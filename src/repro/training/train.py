@@ -11,13 +11,11 @@ mesh-agnostic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.core.lora import LoRAMode
 from repro.models.model import Model
 from repro.training.optimizer import (AdamWState, adamw_init, adamw_update,

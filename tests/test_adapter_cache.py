@@ -1,5 +1,4 @@
 """Heterogeneous memory manager: LRU/LFU + pool invariants (hypothesis)."""
-import numpy as np
 import pytest
 try:
     from hypothesis import given, settings, strategies as st

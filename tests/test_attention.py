@@ -1,7 +1,6 @@
 """Attention: blockwise-flash vs naive reference, masks, ring cache."""
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,38 @@
+"""BENCH_*.json shared schema check (the CI benchmark-smoke contract)."""
+import json
+
+from benchmarks.schema import validate_bench_file, validate_bench_records
+
+
+def test_valid_records_pass():
+    recs = [{"kind": "capacity", "peak": 4, "throughput": 1.5},
+            {"kind": "parity", "identical": 1}]
+    assert validate_bench_records(recs) == []
+
+
+def test_structural_violations_caught():
+    assert validate_bench_records({}) != []          # not a list
+    assert validate_bench_records([]) != []          # empty
+    assert validate_bench_records([42]) != []        # not a dict
+    assert validate_bench_records([{"v": 1}]) != []  # no kind
+    assert validate_bench_records([{"kind": "x"}]) != []  # no numerics
+
+
+def test_non_finite_values_caught():
+    bad = [{"kind": "x", "v": float("nan")}]
+    assert any("non-finite" in e for e in validate_bench_records(bad))
+    nested = [{"kind": "x", "n": 1, "hist": {"a": float("inf")}}]
+    assert any("non-finite" in e for e in validate_bench_records(nested))
+    # bools are not numerics (True would otherwise satisfy the check)
+    assert validate_bench_records([{"kind": "x", "flag": True}]) != []
+
+
+def test_file_level_errors(tmp_path):
+    missing = tmp_path / "BENCH_missing.json"
+    assert validate_bench_file(missing) == [f"{missing}: missing"]
+    garbled = tmp_path / "BENCH_garbled.json"
+    garbled.write_text("{not json")
+    assert any("invalid JSON" in e for e in validate_bench_file(garbled))
+    ok = tmp_path / "BENCH_ok.json"
+    ok.write_text(json.dumps([{"kind": "x", "v": 1.0}]))
+    assert validate_bench_file(ok) == []

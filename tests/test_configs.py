@@ -1,5 +1,4 @@
 """Config system: loading, derived quantities, reduced variants."""
-import dataclasses
 
 import pytest
 

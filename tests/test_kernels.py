@@ -2,7 +2,6 @@
 
 All kernels run in interpret mode on CPU (TPU is the target; interpret
 executes the kernel body exactly)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -13,7 +12,6 @@ except ImportError:  # container has no hypothesis: seeded fallback
 
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import flash_decode
-from repro.kernels.sgmv import sgmv_expand, sgmv_shrink
 
 
 # ---------------------------------------------------------------------------

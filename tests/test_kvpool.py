@@ -85,6 +85,36 @@ def test_write_gather_roundtrip():
     np.testing.assert_array_equal(got, np.stack(ref))
 
 
+def test_capacity_gates_and_oom_stats():
+    """can_allocate/can_append are side-effect-free admission gates; a
+    gated caller never trips oom_events, an ungated append does."""
+    p = PagedKVPool(n_blocks=4, block_size=8)
+    assert p.blocks_for(0) == 0 and p.blocks_for(1) == 1
+    assert p.blocks_for(8) == 1 and p.blocks_for(9) == 2
+    assert p.can_allocate(32) and not p.can_allocate(33)
+    assert 0 not in p.tables  # the gate registered nothing
+    p.register(0)
+    p.append_tokens(0, 30)
+    assert p.can_append(0, 2) and not p.can_append(0, 3)
+    assert p.stats.oom_events == 0
+    with pytest.raises(OutOfBlocksError):
+        p.append_tokens(0, 3)
+    assert p.stats.oom_events == 1
+    assert p.lengths[0] == 30  # all-or-nothing: length unchanged
+    d = p.stats.as_dict()
+    assert d == {"allocs": 4, "frees": 0, "peak_used": 4, "oom_events": 1}
+
+
+def test_free_blocks_property_tracks_free_list():
+    p = PagedKVPool(n_blocks=6, block_size=4)
+    assert p.free_blocks == 6
+    p.register(1)
+    p.append_tokens(1, 9)
+    assert p.free_blocks == 3 and p.used_blocks == 3
+    p.release(1)
+    assert p.free_blocks == 6
+
+
 def test_interleaved_sequences_isolated():
     rng = np.random.default_rng(1)
     p = PagedKVPool(n_blocks=8, block_size=4)

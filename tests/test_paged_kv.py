@@ -1,0 +1,362 @@
+"""Paged KV cache in the serving engine (block tables + SGMV decode).
+
+The contract mirrors PR 2's batching work: swapping per-slot dense ring
+caches for the shared page arena is *not allowed to change a single
+token*. ``kv_backend='paged'`` at dense-equivalent capacity must produce
+bit-identical streams to ``'dense'`` under every scheduler policy, LoRA
+backend, attention variant (global, sliding-window ring wrap, int8
+quant), and architecture family — and under *reduced* capacity the arena
+must degrade by deferring admissions / preempting LIFO, never by
+corrupting streams or leaking blocks.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.slots import Request
+from repro.serving import kvpool
+from repro.serving.engine import EdgeLoRAEngine, EngineConfig
+
+
+def _cfg(n_adapters=6, max_resident=8, **attn_kw):
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    if attn_kw:
+        cfg = dataclasses.replace(
+            cfg, attn=dataclasses.replace(cfg.attn, **attn_kw))
+    return dataclasses.replace(
+        cfg, lora=dataclasses.replace(cfg.lora, n_adapters=n_adapters,
+                                      max_resident=max_resident))
+
+
+def _burst(cfg, n, seed=0, plen=(4, 14), olen=4, stagger=0.0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        pl = int(rng.integers(*plen))
+        reqs.append(Request(
+            request_id=i, arrival_time=i * stagger, prompt_len=pl,
+            output_len=olen,
+            true_adapter=int(rng.integers(cfg.lora.n_adapters)),
+            prompt_tokens=rng.integers(0, cfg.vocab_size, pl,
+                                       dtype=np.int32)))
+    return reqs
+
+
+def _tokens(trace):
+    return {r.request_id: r.tokens for r in trace}
+
+
+def _ecfg(**kw):
+    base = dict(n_slots=4, max_ctx=48, prompt_buckets=(16, 32),
+                policy="edgelora_no_aas", memory_budget=1e12,
+                kv_block_size=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _serve(cfg, trace_args, **ecfg_kw):
+    eng = EdgeLoRAEngine(cfg, _ecfg(**ecfg_kw))
+    trace = _burst(cfg, **trace_args)
+    summary = eng.serve(trace)
+    return eng, summary, _tokens(trace)
+
+
+# ---------------------------------------------------------------------------
+# bit-identical streams: dense vs paged at dense-equivalent capacity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["edgelora", "edgelora_no_aas",
+                                    "llamacpp", "dlora"])
+def test_streams_identical_all_policies(policy):
+    cfg = _cfg()
+    targs = dict(n=10, seed=1, olen=5)
+    _, sd, dense = _serve(cfg, targs, policy=policy, kv_backend="dense")
+    _, sp, paged = _serve(cfg, targs, policy=policy, kv_backend="paged")
+    assert sd.n_completed == sp.n_completed == 10
+    assert dense == paged
+    assert sp.kv_stats["deferrals"] == 0
+    assert sp.kv_stats["preemptions"] == 0
+
+
+def test_streams_identical_sliding_window_ring_wrap():
+    """Window-local layers page through a ring smaller than the bucket:
+    the paged view must reproduce the dense pad-overwrite semantics
+    (``kvpool.dense_ring_positions``), plain and chunked."""
+    for chunked in (False, True):
+        cfg = _cfg(layer_pattern=("local", "global"), sliding_window=8,
+                   chunked_local=chunked)
+        targs = dict(n=8, seed=2, olen=10)
+        _, _, dense = _serve(cfg, targs, kv_backend="dense")
+        _, _, paged = _serve(cfg, targs, kv_backend="paged")
+        assert dense == paged, f"chunked={chunked}"
+
+
+def test_streams_identical_int8_cache_and_sgmv():
+    cfg = _cfg(kv_cache_quant=True)
+    targs = dict(n=6, seed=3)
+    _, _, dense = _serve(cfg, targs, kv_backend="dense",
+                         lora_backend="sgmv")
+    _, _, paged = _serve(cfg, targs, kv_backend="paged",
+                         lora_backend="sgmv")
+    assert dense == paged
+
+
+def test_streams_identical_page_gather_kernel():
+    """The Pallas page-fetch route (interpret mode on CPU) is stream-
+    equivalent to the jnp gather and to dense."""
+    cfg = _cfg()
+    targs = dict(n=6, seed=4)
+    _, _, dense = _serve(cfg, targs, kv_backend="dense")
+    _, _, paged = _serve(cfg, targs, kv_backend="paged",
+                         kv_gather_kernel=True)
+    assert dense == paged
+
+
+def test_streams_identical_ssm_and_hybrid():
+    """Families with recurrent state: paged attention nodes coexist with
+    per-slot dense SSM state (zamba2), or there are no attention nodes
+    at all (mamba2) and paged degenerates to pure pool bookkeeping."""
+    for arch in ("mamba2-130m", "zamba2-2.7b"):
+        cfg = reduced_config(get_config(arch))
+        cfg = dataclasses.replace(
+            cfg, lora=dataclasses.replace(cfg.lora, n_adapters=4,
+                                          max_resident=4))
+        targs = dict(n=4, seed=5)
+        _, _, dense = _serve(cfg, targs, n_slots=2, prompt_buckets=(16,),
+                             kv_backend="dense")
+        _, _, paged = _serve(cfg, targs, n_slots=2, prompt_buckets=(16,),
+                             kv_backend="paged")
+        assert dense == paged, arch
+
+
+def test_full_context_prompt_ring_wraparound():
+    """prompt_len == max_ctx: the single decode write lands one past the
+    ring (dense wraps to index 0; paged allocates the extra page)."""
+    cfg = _cfg()
+    streams = {}
+    for kvb in ("dense", "paged"):
+        eng = EdgeLoRAEngine(cfg, _ecfg(max_ctx=32, kv_backend=kvb))
+        rng = np.random.default_rng(6)
+        trace = [Request(request_id=0, arrival_time=0.0, prompt_len=32,
+                         output_len=4, true_adapter=1,
+                         prompt_tokens=rng.integers(0, cfg.vocab_size, 32,
+                                                    dtype=np.int32))]
+        s = eng.serve(trace)
+        assert s.n_completed == 1
+        streams[kvb] = _tokens(trace)
+    assert streams["dense"] == streams["paged"]
+
+
+# ---------------------------------------------------------------------------
+# capacity edge cases: deferral, preemption, release
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_blocks_defers_admission_and_retries():
+    """An arena far below dense capacity: admissions defer while blocks
+    are pinned, retry after completions free them, every request still
+    completes, and streams equal the dense run (edgelora_no_aas pins
+    adapters, so scheduling changes cannot change tokens)."""
+    cfg = _cfg()
+    targs = dict(n=10, seed=7, olen=8)
+    # 8 pages × 8 tokens = 64 KV tokens shared by 4 slots (dense needs
+    # 4 × ceil(49/8) = 28 pages)
+    eng, sp, paged = _serve(cfg, targs, kv_backend="paged",
+                            kv_arena_blocks=8)
+    assert sp.n_completed == 10
+    assert sp.kv_stats["deferrals"] > 0
+    assert sp.kv_stats["oom_events"] == 0  # gated, never thrown
+    _, _, dense = _serve(cfg, targs, kv_backend="dense")
+    assert paged == dense
+    # arena fully drained after the run
+    assert eng.kvpool.used_blocks == 0
+    assert eng.kvpool.stats.frees == eng.kvpool.stats.allocs
+
+
+def test_decode_growth_preempts_lifo_and_restarts():
+    """Admissions that fit at prompt time but outgrow the arena while
+    decoding force preemption: the youngest admission restarts (its
+    partial output is discarded and recomputed identically) and the
+    oldest always completes."""
+    cfg = _cfg()
+    # each sequence grows from 1 page (prompt 8) to 3 pages (8 + 15
+    # decode writes = 23 tokens); an arena of 4 pages admits two
+    # sequences (1 + 1, headroom-checked) then runs dry mid-decode
+    rng = np.random.default_rng(8)
+    def trace():
+        return [Request(request_id=i, arrival_time=0.0, prompt_len=8,
+                        output_len=16, true_adapter=i % 4,
+                        prompt_tokens=rng_toks[i])
+                for i in range(3)]
+    rng_toks = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+                for _ in range(3)]
+    eng = EdgeLoRAEngine(cfg, _ecfg(n_slots=2, max_ctx=24,
+                                    kv_backend="paged",
+                                    kv_arena_blocks=4))
+    tp = trace()
+    sp = eng.serve(tp)
+    assert sp.n_completed == 3
+    assert sp.kv_stats["preemptions"] >= 1
+    assert eng.kvpool.used_blocks == 0
+    eng_d = EdgeLoRAEngine(cfg, _ecfg(n_slots=2, max_ctx=24,
+                                      kv_backend="dense"))
+    td = trace()
+    eng_d.serve(td)
+    assert _tokens(tp) == _tokens(td)
+
+
+def test_blocks_released_on_completion():
+    """Every allocation is returned: after serving, the free list holds
+    the whole arena and per-sequence tables are gone."""
+    cfg = _cfg()
+    eng, s, _ = _serve(cfg, dict(n=8, seed=9), kv_backend="paged")
+    assert s.n_completed == 8
+    assert eng.kvpool.used_blocks == 0
+    assert eng.kvpool.tables == {}
+    assert eng.kvpool.stats.frees == eng.kvpool.stats.allocs > 0
+    assert s.kv_stats["peak_used"] <= eng.kvpool.n_blocks
+
+
+def test_fragmentation_heavy_skewed_workload():
+    """Many short + few long sequences churning through a small arena:
+    allocation invariants hold throughout (no double-booking is
+    guaranteed by the pool; here: completion, drained arena, and peak
+    within capacity), and streams still match dense."""
+    cfg = _cfg()
+    rng = np.random.default_rng(10)
+    def trace():
+        reqs = []
+        for i in range(16):
+            pl = 40 if i % 5 == 0 else int(rng_pl[i])
+            reqs.append(Request(
+                request_id=i, arrival_time=0.0, prompt_len=pl,
+                output_len=6, true_adapter=i % cfg.lora.n_adapters,
+                prompt_tokens=rng_toks[i][:pl]))
+        return reqs
+    rng_pl = rng.integers(4, 10, 16)
+    rng_toks = [rng.integers(0, cfg.vocab_size, 40, dtype=np.int32)
+                for _ in range(16)]
+    eng = EdgeLoRAEngine(cfg, _ecfg(kv_backend="paged",
+                                    kv_arena_blocks=8))
+    tp = trace()
+    sp = eng.serve(tp)
+    assert sp.n_completed == 16
+    assert sp.kv_stats["deferrals"] > 0
+    assert sp.kv_stats["peak_used"] <= 8
+    assert eng.kvpool.used_blocks == 0
+    eng_d = EdgeLoRAEngine(cfg, _ecfg(kv_backend="dense"))
+    td = trace()
+    eng_d.serve(td)
+    assert _tokens(tp) == _tokens(td)
+
+
+def test_arena_too_small_for_one_sequence_rejected():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="lone request"):
+        EdgeLoRAEngine(cfg, _ecfg(kv_backend="paged", kv_arena_blocks=2))
+
+
+def test_unknown_kv_backend_rejected():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="kv_backend"):
+        EdgeLoRAEngine(cfg, _ecfg(kv_backend="paging"))
+
+
+def test_paged_overcommit_peaks_above_dense_equivalent_slots():
+    """The point of paging: at a fixed KV-token arena, paged serves more
+    concurrent sequences than the dense layout's slot count. 4 dense
+    slots' worth of pages (4 × ceil(49/8) = 28) hosts 8 paged slots'
+    short sequences simultaneously."""
+    cfg = _cfg(n_adapters=8)
+    targs = dict(n=12, seed=11, plen=(4, 10), olen=4)
+    _, sd, _ = _serve(cfg, targs, n_slots=4, kv_backend="dense")
+    _, sp, _ = _serve(cfg, targs, n_slots=8, kv_backend="paged",
+                      kv_arena_blocks=28)
+    assert sp.n_completed == sd.n_completed == 12
+    assert sp.peak_active_slots > sd.peak_active_slots
+    assert sp.peak_active_slots > 4
+
+
+# ---------------------------------------------------------------------------
+# unit: ring-position reconstruction + view against a brute-force ring
+# ---------------------------------------------------------------------------
+
+
+def _brute_ring(writes, clen):
+    """Replay (position, valid) writes through a literal ring buffer."""
+    ring = [-1] * clen
+    for p, valid in writes:
+        ring[p % clen] = p if valid else -1
+    return ring
+
+
+@pytest.mark.parametrize("clen,bw,lp,cur", [
+    (8, 16, 5, 5), (8, 16, 5, 9), (8, 16, 16, 20), (8, 8, 8, 13),
+    (16, 16, 3, 3), (16, 16, 3, 17), (4, 16, 11, 13), (48, 16, 9, 14),
+])
+def test_dense_ring_positions_match_brute_force(clen, bw, lp, cur):
+    """dense_ring_positions == replaying the dense engine's write
+    history: prefill writes [0, bw) (pads invalid), decode [lp, cur)."""
+    writes = [(p, p < lp) for p in range(bw)]
+    writes += [(p, True) for p in range(lp, cur)]
+    expect = _brute_ring(writes, clen)
+    got = np.asarray(kvpool.dense_ring_positions(
+        np.array([cur], np.int32), np.array([lp], np.int32),
+        np.array([bw], np.int32), clen))[0]
+    assert list(got) == expect
+
+
+def test_paged_view_reconstructs_dense_cache_leaves():
+    """Leaf-level: one prefill scattered into pages, gathered back
+    through the block table, equals the dense engine's written cache row
+    wherever the dense layout holds a valid position — and the 'pos'
+    leaves agree everywhere (so masks see identical validity)."""
+    cfg = _cfg()
+    eng_d = EdgeLoRAEngine(cfg, _ecfg(kv_backend="dense"))
+    eng_p = EdgeLoRAEngine(cfg, _ecfg(kv_backend="paged"))
+    rng = np.random.default_rng(13)
+    bucket, plen = 16, 11
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, bucket),
+                                    dtype=np.int32))
+    lengths = jnp.asarray(np.array([plen], np.int32))
+    sids = jnp.asarray(np.array([2], np.int32))
+    slot_idx = jnp.asarray(np.array([0], np.int32))
+
+    cb_d = eng_d._fresh_cache(1)
+    _, cb_d = eng_d._prefill(eng_d.params, eng_d.lora_pool, toks, cb_d,
+                             sids, lengths)
+    dense_cache = eng_d._write_slots(eng_d.cache, cb_d, slot_idx)
+
+    cb_p = eng_p._fresh_cache(1)
+    _, cb_p = eng_p._prefill(eng_p.params, eng_p.lora_pool, toks, cb_p,
+                             sids, lengths)
+    meta = eng_p._kv_meta
+    eng_p.kvpool.register(0)
+    eng_p.kvpool.append_tokens(0, plen)
+    tables = jnp.asarray(
+        eng_p.kvpool.block_table(0, meta.max_blocks))[None]
+    bw = jnp.asarray(np.array([bucket], np.int32))
+    paged_cache = eng_p._paged_write(eng_p.cache, cb_p, tables, lengths,
+                                     bw, slot_idx)
+    view = kvpool.paged_view(paged_cache, tables, lengths, lengths, bw,
+                             meta)
+
+    for path, _clen in meta.attn_paths:
+        dnode, vnode = dense_cache, view
+        for k in path:
+            dnode, vnode = dnode[k], vnode[k]
+        dpos = np.asarray(dnode["pos"][:, 0])          # [ng, clen]
+        vpos = np.asarray(vnode["pos"][:, 0])
+        np.testing.assert_array_equal(dpos, vpos)
+        valid = dpos >= 0
+        for key in dnode:
+            if key == "pos":
+                continue
+            dv = np.asarray(dnode[key][:, 0])          # [ng, clen, ...]
+            vv = np.asarray(vnode[key][:, 0])
+            np.testing.assert_array_equal(
+                dv[valid], vv[valid], err_msg=f"{path}/{key}")

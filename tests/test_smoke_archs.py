@@ -12,7 +12,6 @@ import pytest
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.core.lora import LoRAMode
 from repro.models import build_model
-from repro.training.data import DataConfig, lm_batches
 from repro.training.train import init_train_state, make_train_step
 
 

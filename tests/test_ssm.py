@@ -1,5 +1,4 @@
 """Mamba-2 SSD: chunked dual form vs naive recurrence oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -2,8 +2,6 @@
 workloads, across all three scheduler policies."""
 import dataclasses
 
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 # serves full traces under every policy (one jit warmup per policy);
