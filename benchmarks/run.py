@@ -12,7 +12,7 @@ import time
 def main() -> None:
     t0 = time.time()
     from benchmarks import (batched_lora_micro, paged_kv, prefill_batching,
-                            router_bench, serving_tables)
+                            prefix_cache, router_bench, serving_tables)
     print("name,us_per_call,derived")
     # paper tables on the serving engine
     serving_tables.table4_throughput_vs_adapters()
@@ -31,6 +31,9 @@ def main() -> None:
     # paged vs dense KV capacity at fixed arena bytes (+ stream parity,
     # page-gather kernel check; writes BENCH_paged_kv.json)
     paged_kv.main()
+    # shared-prefix radix cache: warm-vs-cold prefill + arena footprint
+    # vs tenancy (writes BENCH_prefix_cache.json)
+    prefix_cache.main()
     # batched LoRA micro + kernels
     batched_lora_micro.fig6_batched_vs_sequential()
     batched_lora_micro.backend_einsum_vs_sgmv()

@@ -41,20 +41,28 @@ def select_adapter(scores: np.ndarray, manager: AdapterMemoryManager,
 
 class OracleRouter:
     """Scores peaked at the true adapter; ``accuracy`` controls how often
-    the argmax lands on it (models an imperfect learned router)."""
+    the argmax lands on it (models an imperfect learned router).
+
+    Scores are a pure function of ``(seed, request_id)`` — NOT of call
+    order. A real learned router is deterministic per prompt; the oracle
+    must match, or engine-config changes that merely reorder scheduling
+    (batching, paged KV, prefix-cache timing shifts) would re-roll
+    selections and the stream-parity regression suites couldn't hold.
+    """
 
     def __init__(self, n_adapters: int, accuracy: float = 0.95, seed: int = 0):
         self.n_adapters = n_adapters
         self.accuracy = accuracy
-        self._rng = np.random.default_rng(seed)
+        self.seed = seed
 
     def scores(self, request) -> np.ndarray:
-        s = self._rng.uniform(0.0, 0.5, self.n_adapters)
+        rng = np.random.default_rng([self.seed, request.request_id])
+        s = rng.uniform(0.0, 0.5, self.n_adapters)
         true = request.true_adapter if request.true_adapter is not None else 0
-        if self._rng.uniform() < self.accuracy:
+        if rng.uniform() < self.accuracy:
             s[true] = 1.0
         else:
-            s[self._rng.integers(self.n_adapters)] = 1.0
+            s[rng.integers(self.n_adapters)] = 1.0
             s[true] = 0.9
         return s
 

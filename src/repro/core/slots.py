@@ -67,6 +67,9 @@ class Slot:
     # preempts the youngest admission first (LIFO) when the block arena
     # runs dry mid-decode
     admit_seq: int = 0
+    # tokens of the prompt served from shared cached pages (prefix-cache
+    # hit; 0 = cold). Prefill runs only on the remaining suffix.
+    prefix_len: int = 0
 
     def assign(self, req: Request) -> None:
         assert self.state == SlotState.IDLE
@@ -77,6 +80,7 @@ class Slot:
         self.merged = False
         self.bucket = None
         self.padded_prompt = None
+        self.prefix_len = 0
 
     def release(self) -> Request:
         req = self.request
@@ -87,6 +91,7 @@ class Slot:
         self.merged = False
         self.bucket = None
         self.padded_prompt = None
+        self.prefix_len = 0
         return req
 
 

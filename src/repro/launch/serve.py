@@ -55,6 +55,24 @@ def main(argv=None) -> int:
                     help="KV arena pages (paged backend; default sizes "
                          "the arena to dense-equivalent capacity — set "
                          "lower to overcommit)")
+    ap.add_argument("--prefix-cache", action="store_true", default=False,
+                    help="shared-prefix radix KV cache: requests whose "
+                         "block-aligned prompt prefix was already "
+                         "prefilled under the same (adapter, merged) "
+                         "identity splice the cached pages and prefill "
+                         "only the suffix (implies --kv-backend paged "
+                         "when unset; streams are bit-identical, only "
+                         "prefill compute and arena footprint change)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable the shared-prefix cache (default)")
+    ap.add_argument("--system-prompt-len", type=int, default=0,
+                    help="per-adapter shared system prompt length in the "
+                         "synthetic workload (the repeated per-tenant "
+                         "prefix --prefix-cache exploits)")
+    ap.add_argument("--shared-prefix-frac", type=float, default=1.0,
+                    help="fraction of each adapter's requests that open "
+                         "with its system prompt")
     ap.add_argument("--no-prefill-batching", dest="prefill_batching",
                     action="store_false",
                     help="one B=1 prefill per slot (pre-batching baseline)")
@@ -72,13 +90,20 @@ def main(argv=None) -> int:
     cfg = dataclasses.replace(
         cfg, lora=dataclasses.replace(cfg.lora, n_adapters=args.n_adapters))
 
+    if args.prefix_cache and args.kv_backend is None:
+        args.kv_backend = "paged"  # the shared pages live in the arena
+
     wl = WorkloadConfig(
         n_adapters=args.n_adapters, alpha=args.alpha,
         request_rate=args.rate, cv=args.cv, duration=args.duration,
         input_range=(8, 64), output_range=(8, 32),
+        system_prompt_len=args.system_prompt_len,
+        shared_prefix_frac=args.shared_prefix_frac,
         vocab_size=cfg.vocab_size, seed=args.seed)
     trace = generate_trace(wl)
 
+    # buckets must cover system prompt + longest tail (the engine extends
+    # to max_ctx anyway; keep small buckets for the short-prompt traffic)
     ecfg = EngineConfig(
         n_slots=args.n_slots, top_k=args.top_k, policy=args.policy,
         max_ctx=args.max_ctx, prompt_buckets=(32, 64),
@@ -86,6 +111,7 @@ def main(argv=None) -> int:
         lora_backend=args.lora_backend,
         kv_backend=args.kv_backend, kv_block_size=args.kv_block_size,
         kv_arena_blocks=args.kv_arena_blocks,
+        prefix_cache=args.prefix_cache,
         prefill_batching=args.prefill_batching,
         router_batching=args.router_batching, seed=args.seed)
     try:
@@ -106,7 +132,8 @@ def main(argv=None) -> int:
               f"first_token={summary.avg_first_token:.3f}s "
               f"slo={summary.slo_attainment:.1%} "
               f"hit_rate={summary.cache_hit_rate:.1%} "
-              f"{summary.batching_row()} {summary.kv_row()}")
+              f"{summary.batching_row()} {summary.kv_row()} "
+              f"{summary.prefix_row()}")
     return 0
 
 

@@ -162,6 +162,46 @@ class Model:
             last = h[:, -1]
         return self.logits(params, last), cache
 
+    def prefill_suffix(self, params: Dict, tokens: jax.Array,
+                       cache: Dict, arena_cache: Dict, tables: jax.Array,
+                       lengths: jax.Array, prefix_len: int,
+                       lora: Optional[Dict] = None,
+                       lora_mode: LoRAMode = LoRAMode(),
+                       opts: Optional[Dict] = None, *,
+                       meta) -> Tuple[jax.Array, Dict]:
+        """Prefill only the suffix of a prompt whose first ``prefix_len``
+        tokens are already cached in the page arena (shared-prefix hit,
+        see ``serving/prefix_cache.py``).
+
+        tokens: [B, S] suffix tokens (the full padded prompt minus its
+        first ``prefix_len`` columns — S = full bucket − prefix_len, so
+        key widths match the cold full prefill exactly); tables:
+        [B, max_blocks] block tables already spliced with the shared
+        prefix pages; lengths: [B] real *total* prompt lengths;
+        ``prefix_len`` is static (one jit shape per distinct prefix).
+        Per layer, attention runs over gathered prefix KV followed by
+        fresh suffix KV — the same keys, positions, and mask the cold
+        prefill sees, so the returned last-token logits and the suffix
+        KV written into ``cache`` (the mini ring the engine scatters via
+        ``kvpool.scatter_suffix``) are bit-identical to a cold run.
+        Supported stacks are attention-only with full-length rings
+        (``kvpool.prefix_unsupported_reason`` gates the rest).
+        """
+        from repro.serving import kvpool  # deferred: engine→models cycle
+
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = self.embed(params, tokens)
+        positions = prefix_len + jnp.arange(s)
+        prefix_kv = kvpool.gather_prefix(arena_cache, tables, prefix_len,
+                                         meta)
+        h, _, cache = transformer.forward_stack(
+            params, x, cfg, positions, lora, lora_mode, opts, cache=cache,
+            prefix_kv=prefix_kv,
+            prefix_positions=jnp.arange(prefix_len, dtype=jnp.int32))
+        last = h[jnp.arange(b), lengths - prefix_len - 1]
+        return self.logits(params, last), cache
+
     def decode_step(self, params: Dict, tokens: jax.Array, cache: Dict,
                     pos: jax.Array, lora: Optional[Dict] = None,
                     lora_mode: LoRAMode = LoRAMode(),

@@ -204,14 +204,26 @@ def init_lora_stack(rng: jax.Array, cfg: ModelConfig, *,
 def _attn_block_full(slot_p: Dict, lora_p: Optional[Dict], x: jax.Array,
                      cfg: ModelConfig, kind: str, positions: jax.Array,
                      lora_mode: LoRAMode, opts: Dict,
-                     cache_slot: Optional[Dict] = None):
+                     cache_slot: Optional[Dict] = None,
+                     prefix_kv: Optional[Dict] = None,
+                     prefix_positions: Optional[jax.Array] = None):
     h = rmsnorm(slot_p["ln1"], x, cfg.norm_eps)
     q, k, v = attn_lib.project_qkv(slot_p["attn"], h, cfg, positions,
                                    lora_p, lora_mode)
     if cache_slot is not None:
         cache_slot = attn_lib.cache_fill(cache_slot, k, v, positions)
+    k_all, v_all, kpos = k, v, positions
+    if prefix_kv is not None:
+        # suffix prefill over a shared cached prefix: keys/values are the
+        # gathered prefix KV (positions [0, P), donor-written, post-RoPE)
+        # followed by this pass's fresh suffix KV — the same key order,
+        # positions, and mask a cold full prefill sees, so per-position
+        # attention is bit-identical to the cold path
+        k_all = jnp.concatenate([prefix_kv["k"].astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([prefix_kv["v"].astype(v.dtype), v], axis=1)
+        kpos = jnp.concatenate([prefix_positions, positions])
     o = attn_lib.blockwise_attention(
-        q, k, v, positions, positions, kind=kind, cfg=cfg,
+        q, k_all, v_all, positions, kpos, kind=kind, cfg=cfg,
         block_q=opts.get("block_q", 512),
         block_kv=opts.get("block_kv", 1024),
         skip_masked_blocks=opts.get("skip_masked_blocks", False))
@@ -266,6 +278,8 @@ def forward_stack(params: Dict, x: jax.Array, cfg: ModelConfig,
                   cache: Optional[Dict] = None,
                   seq_mask: Optional[jax.Array] = None,
                   lengths: Optional[jax.Array] = None,
+                  prefix_kv: Optional[Dict] = None,
+                  prefix_positions: Optional[jax.Array] = None,
                   ):
     """x: [B, S, d] -> (hidden [B, S, d], aux losses[, filled cache]).
 
@@ -273,6 +287,13 @@ def forward_stack(params: Dict, x: jax.Array, cfg: ModelConfig,
     additionally bulk-write their K/V into the ring caches; SSM slots run
     with ``return_state`` and store the final recurrent state. ``seq_mask``
     / ``lengths`` handle right-padded prompt buckets exactly (see engine).
+
+    ``prefix_kv`` (suffix prefill over a shared cached prefix, see
+    ``serving/prefix_cache.py``): a tree mirroring the attention slots of
+    ``cache`` with leaves [ng, B, P, ...] — per-layer K/V for positions
+    [0, P) gathered from the page arena. Attention runs over
+    prefix-then-fresh keys; only the fresh suffix is written to ``cache``.
+    Prefix-shared stacks are attention-only (no SSM, no shared block).
     """
     opts = opts or {}
     period = stack_period(cfg)
@@ -281,13 +302,20 @@ def forward_stack(params: Dict, x: jax.Array, cfg: ModelConfig,
     shared_lora = (lora or {}).get("shared_attn")
     shared_params = params.get("shared_attn")
     fill = cache is not None
+    has_prefix = prefix_kv is not None
+    assert not has_prefix or (fill and shared_params is None), \
+        "prefix_kv requires the prefill path on an attention-only stack"
     slot_caches = ({k: v for k, v in cache.items() if k != "shared"}
                    if fill else {})
 
     def group_body(carry, group_leaves):
         h, aux_lb, aux_z = carry
+        gpre = {}
         if fill and shared_params is not None:
             gp, gl, gc, shared_c = group_leaves
+        elif fill and has_prefix:
+            gp, gl, gc, gpre = group_leaves
+            shared_c = None
         elif fill:
             gp, gl, gc = group_leaves
             shared_c = None
@@ -320,7 +348,9 @@ def forward_stack(params: Dict, x: jax.Array, cfg: ModelConfig,
                                 lora_mode=lora_mode)
             else:
                 o, cp = _attn_block_full(sp, lp, h, cfg, kind, positions,
-                                         lora_mode, opts, cp)
+                                         lora_mode, opts, cp,
+                                         prefix_kv=gpre.get(f"slot{p}"),
+                                         prefix_positions=prefix_positions)
                 h = h + o
                 y, aux = _ffn_block_full(sp, lp, h, cfg, slot_is_moe(cfg, p),
                                          lora_mode)
@@ -353,6 +383,8 @@ def forward_stack(params: Dict, x: jax.Array, cfg: ModelConfig,
     if fill and shared_params is not None:
         xs = (params["layers"], lora_layers or {}, slot_caches,
               cache["shared"])
+    elif fill and has_prefix:
+        xs = (params["layers"], lora_layers or {}, slot_caches, prefix_kv)
     elif fill:
         xs = (params["layers"], lora_layers or {}, slot_caches)
     else:

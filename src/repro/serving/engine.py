@@ -95,6 +95,7 @@ from repro.models import build_model
 from repro.serving import kvpool as kvlib
 from repro.serving.kvpool import PagedKVPool
 from repro.serving.metrics import ServingSummary, summarize
+from repro.serving.prefix_cache import PrefixCache
 
 
 class OutOfMemoryError(RuntimeError):
@@ -136,6 +137,18 @@ class EngineConfig:
     # (None → only where it pays: real TPU; True forces interpret mode
     # off-TPU for parity testing)
     kv_gather_kernel: Optional[bool] = None
+    # shared-prefix radix KV cache (requires kv_backend='paged'): admitted
+    # prompts whose block-aligned prefix matches a previously prefilled
+    # prompt of the same (adapter, merged-ness) execution identity splice
+    # the cached pages into their block table and prefill only the
+    # suffix. Pages are ref-counted with copy-on-write on partial-block
+    # append; unreferenced cached pages form an LRU pool reclaimed before
+    # the deferral/preemption machinery engages. Token streams are
+    # bit-identical to prefix_cache=False (regression-tested); only
+    # prefill compute and arena footprint change. Unsupported model
+    # families (window-local rings, int8 KV, SSM/cross state) raise at
+    # engine init — see kvpool.prefix_unsupported_reason.
+    prefix_cache: bool = False
     disk_bandwidth: float = 1.0e9    # adapter swap-in bytes/s (host->HBM)
     mem_bandwidth: float = 60.0e9    # merge/unmerge traffic (llama.cpp mode)
     memory_budget: float = 6.0e9     # adapter memory budget (llamacpp preload)
@@ -233,6 +246,8 @@ class EdgeLoRAEngine:
         model, cfg = self.model, self.cfg
         scale = cfg.lora.scale
         backend, interpret = self.lora_backend, self._sgmv_interpret
+        self.prefix_enabled = False
+        self.prefix_cache = None
 
         def prefill_fn(params, pool, tokens, cache1, slot_id, length):
             mode = LoRAMode("batched", slot_id, scale, backend, interpret)
@@ -277,6 +292,10 @@ class EdgeLoRAEngine:
 
         self._write_slots = jax.jit(write_slots)
         if not self.paged:
+            if self.ecfg.prefix_cache:
+                raise ValueError(
+                    "prefix_cache=True requires kv_backend='paged' — the "
+                    "shared pages live in the block arena")
             self.cache = self.model.init_cache(self.ecfg.n_slots,
                                                self.ecfg.max_ctx)
             return
@@ -335,6 +354,50 @@ class EdgeLoRAEngine:
         self._decode_paged = jax.jit(paged_decode_fn)
         self._decode_merged_paged = jax.jit(paged_decode_merged)
         self._paged_write = jax.jit(paged_write)
+
+        # ---- shared-prefix radix cache over the arena -----------------
+        self.prefix_enabled = bool(ecfg.prefix_cache)
+        self.prefix_cache = None
+        if not self.prefix_enabled:
+            return
+        reason = kvlib.prefix_unsupported_reason(template, ecfg.max_ctx)
+        if reason is not None:
+            raise ValueError(
+                f"prefix_cache unsupported for {cfg.name}: {reason}")
+        # PrefixCache self-wires as the pool's reclaimer (its memoized
+        # reclaimable() depends on the pool's refcount-change hook)
+        self.prefix_cache = PrefixCache(self.kvpool, bs)
+
+        def prefill_suffix_fn(params, pool, tokens, cache1, arena, tables,
+                              slot_id, length, *, prefix_len):
+            mode = LoRAMode("batched", slot_id, scale, backend, interpret)
+            logits, cache1 = model.prefill_suffix(
+                params, tokens, cache1, arena, tables, length, prefix_len,
+                pool, mode, meta=meta)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache1
+
+        def prefill_suffix_merged_fn(params, tokens, cache1, arena, tables,
+                                     length, *, prefix_len):
+            logits, cache1 = model.prefill_suffix(
+                params, tokens, cache1, arena, tables, length, prefix_len,
+                meta=meta)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache1
+
+        def scatter_suffix_fn(arena, mini, tables, lengths, *,
+                              prefix_len, suffix_len):
+            return kvlib.scatter_suffix(arena, mini, tables, lengths,
+                                        prefix_len, suffix_len, meta)
+
+        def copy_block_fn(arena, src, dst):
+            return kvlib.copy_block(arena, src, dst, meta)
+
+        self._prefill_suffix = jax.jit(prefill_suffix_fn,
+                                       static_argnames=("prefix_len",))
+        self._prefill_suffix_merged = jax.jit(
+            prefill_suffix_merged_fn, static_argnames=("prefix_len",))
+        self._scatter_suffix = jax.jit(
+            scatter_suffix_fn, static_argnames=("prefix_len", "suffix_len"))
+        self._copy_block = jax.jit(copy_block_fn)
 
     def _fresh_cache(self, batch: int):
         """Zeroed prefill cache for one batch group (no persistent
@@ -511,8 +574,20 @@ class EdgeLoRAEngine:
                 self._admit_counter += 1
                 if self.paged:
                     self.kvpool.register(req.request_id)
-                    self.kvpool.append_tokens(req.request_id,
-                                              req.prompt_len)
+                    key = (self._admission_exec_key(req, dlora_mode)
+                           if self.prefix_enabled else None)
+                    if key is not None:
+                        # execution identity known at admission: splice
+                        # cached prefix pages now and allocate only the
+                        # suffix (the +1 gate headroom covers the COW
+                        # page, so this cannot OOM)
+                        slot.prefix_len = self._admit_prefix(req, key)
+                    else:
+                        # AAS-routed request: adapter unknown until
+                        # selection — reserve the full prompt and swap
+                        # in shared pages at SELECTING→PREFILL
+                        self.kvpool.append_tokens(req.request_id,
+                                                  req.prompt_len)
                 if from_requeue:
                     self._requeue.pop(0)
                 else:
@@ -629,6 +704,12 @@ class EdgeLoRAEngine:
                     pool_slot = 0  # merged weights: adapter rides W
                 slot.sel_scores = None
                 slot.adapter_slot = pool_slot
+                if self.prefix_enabled and \
+                        self._admission_exec_key(req, dlora_mode) is None:
+                    # AAS-routed: the adapter was unknown at admission —
+                    # match now and swap shared pages into the reserved
+                    # table (capacity accounting stays conservative)
+                    self._attach_prefix(slot)
                 slot.state = SlotState.PREFILL
                 progressed = True
 
@@ -636,22 +717,25 @@ class EdgeLoRAEngine:
             prefilling = self.slots.in_state(SlotState.PREFILL)
             if prefilling:
                 # group same-bucket slots (split by merged-ness: merged
-                # steps skip LoRA math entirely); one jit'd [B, bucket]
-                # prefill per group — heterogeneous adapters batch fine,
-                # the SGMV/einsum delta is per-row
-                groups: Dict[Tuple[int, bool], List[Slot]] = {}
+                # steps skip LoRA math entirely — and by prefix length:
+                # prefix-hit rows prefill only their suffix, a different
+                # jit shape); one jit'd [B, bucket − prefix] prefill per
+                # group — heterogeneous adapters batch fine, the
+                # SGMV/einsum delta is per-row
+                groups: Dict[Tuple[int, bool, int], List[Slot]] = {}
                 for slot in prefilling:
                     self._slot_prompt(slot)
-                    groups.setdefault((slot.bucket, slot.merged),
-                                      []).append(slot)
-                work: List[Tuple[int, bool, List[Slot]]] = []
-                for (b, merged), group in groups.items():
+                    groups.setdefault(
+                        (slot.bucket, slot.merged, slot.prefix_len),
+                        []).append(slot)
+                work: List[Tuple[int, bool, int, List[Slot]]] = []
+                for (b, merged, pfx), group in groups.items():
                     if ecfg.prefill_batching:
-                        work.append((b, merged, group))
+                        work.append((b, merged, pfx, group))
                     else:  # pre-batching baseline: one B=1 call per slot
-                        work.extend((b, merged, [s]) for s in group)
-                for b, merged, group in work:
-                    now += self._prefill_group(b, merged, group, now)
+                        work.extend((b, merged, pfx, [s]) for s in group)
+                for b, merged, pfx, group in work:
+                    now += self._prefill_group(b, merged, pfx, group, now)
                 progressed = True
 
             # ---- batched decode (Batch LoRA Inference) ----------------
@@ -737,6 +821,8 @@ class EdgeLoRAEngine:
                         **self.kvpool.stats.as_dict(),
                         "deferrals": self.kv_deferrals,
                         "preemptions": self.kv_preemptions}
+        prefix_stats = (self.prefix_cache.summary()
+                        if self.prefix_enabled else None)
         return summarize(queue, duration, ecfg.slo_seconds,
                          cache_stats=self.manager.stats,
                          energy_proxy=self.busy_time / duration,
@@ -748,34 +834,24 @@ class EdgeLoRAEngine:
                                  self.prefill_batch_hist),
                              "peak_active_slots": self.peak_active_slots,
                              "kv_stats": kv_stats,
+                             "prefix_stats": prefix_stats,
                          })
 
-    def _prefill_group(self, bucket: int, merged: bool, group: List[Slot],
-                       now: float) -> float:
+    def _prefill_group(self, bucket: int, merged: bool, prefix_len: int,
+                       group: List[Slot], now: float) -> float:
         """Run one batched prefill over ``group`` (same bucket, same
-        merged-ness, mixed adapters) and scatter all fresh KV slices into
-        the global cache in one vectorized write. Returns the wall-time
-        charged for the group (once, not per member)."""
+        merged-ness, same prefix length, mixed adapters) and scatter all
+        fresh KV slices into the global cache in one vectorized write.
+        Prefix-hit groups (prefix_len > 0, paged + prefix cache only)
+        run the suffix-only prefill over their spliced block tables.
+        Returns the wall-time charged for the group (once, not per
+        member)."""
         rows = self._pad_group(group)
-        toks = jnp.stack([s.padded_prompt for s in rows])
         lengths = jnp.asarray(
             np.fromiter((s.request.prompt_len for s in rows), np.int32,
                         count=len(rows)))
         cacheb = self._fresh_cache(len(rows))
-        if merged:
-            (first, cacheb), dt = self._timed(
-                ("prefill_merged", bucket, len(rows)),
-                self._prefill_merged, self.params, toks, cacheb, lengths)
-        else:
-            sids = jnp.asarray(
-                np.fromiter((s.adapter_slot for s in rows), np.int32,
-                            count=len(rows)))
-            (first, cacheb), dt = self._timed(
-                ("prefill", bucket, len(rows)), self._prefill,
-                self.params, self.lora_pool, toks, cacheb, sids, lengths)
-        slot_idx = jnp.asarray(
-            np.fromiter((s.index for s in rows), np.int32,
-                        count=len(rows)))
+        tables = None
         if self.paged:
             # per-row block tables (padded replica rows share the real
             # row's sequence, so their duplicate page writes are
@@ -784,11 +860,57 @@ class EdgeLoRAEngine:
             tables = jnp.asarray(np.stack(
                 [self.kvpool.block_table(s.request.request_id, mb)
                  for s in rows]))
-            bwlens = jnp.full((len(rows),), bucket, jnp.int32)
-            self.cache = self._paged_write(self.cache, cacheb, tables,
-                                           lengths, bwlens, slot_idx)
+        if prefix_len:
+            # suffix-only prefill: the padded prompt minus its cached
+            # prefix columns keeps key widths equal to the cold full
+            # prefill (bit-exact streams), while compute shrinks by
+            # prefix_len / bucket
+            toks = jnp.stack([s.padded_prompt[prefix_len:] for s in rows])
+            if merged:
+                fn = functools.partial(self._prefill_suffix_merged,
+                                       prefix_len=prefix_len)
+                (first, cacheb), dt = self._timed(
+                    ("prefill_sfx_merged", bucket, prefix_len, len(rows)),
+                    fn, self.params, toks, cacheb, self.cache, tables,
+                    lengths)
+            else:
+                sids = jnp.asarray(
+                    np.fromiter((s.adapter_slot for s in rows), np.int32,
+                                count=len(rows)))
+                fn = functools.partial(self._prefill_suffix,
+                                       prefix_len=prefix_len)
+                (first, cacheb), dt = self._timed(
+                    ("prefill_sfx", bucket, prefix_len, len(rows)),
+                    fn, self.params, self.lora_pool, toks, cacheb,
+                    self.cache, tables, sids, lengths)
+            self.cache = self._scatter_suffix(
+                self.cache, cacheb, tables, lengths,
+                prefix_len=prefix_len, suffix_len=bucket - prefix_len)
         else:
-            self.cache = self._write_slots(self.cache, cacheb, slot_idx)
+            toks = jnp.stack([s.padded_prompt for s in rows])
+            if merged:
+                (first, cacheb), dt = self._timed(
+                    ("prefill_merged", bucket, len(rows)),
+                    self._prefill_merged, self.params, toks, cacheb,
+                    lengths)
+            else:
+                sids = jnp.asarray(
+                    np.fromiter((s.adapter_slot for s in rows), np.int32,
+                                count=len(rows)))
+                (first, cacheb), dt = self._timed(
+                    ("prefill", bucket, len(rows)), self._prefill,
+                    self.params, self.lora_pool, toks, cacheb, sids,
+                    lengths)
+            slot_idx = jnp.asarray(
+                np.fromiter((s.index for s in rows), np.int32,
+                            count=len(rows)))
+            if self.paged:
+                bwlens = jnp.full((len(rows),), bucket, jnp.int32)
+                self.cache = self._paged_write(self.cache, cacheb, tables,
+                                               lengths, bwlens, slot_idx)
+            else:
+                self.cache = self._write_slots(self.cache, cacheb,
+                                               slot_idx)
         self.prefill_steps += 1
         self.prefill_batch_hist[len(group)] = \
             self.prefill_batch_hist.get(len(group), 0) + 1
@@ -801,7 +923,102 @@ class EdgeLoRAEngine:
             req.generated = 1
             req.tokens = [slot.last_token]
             slot.state = SlotState.GENERATE
+        if self.prefix_enabled:
+            # index every full prompt block (cold rows donate fresh
+            # pages; warm rows walk their matched path — a no-op except
+            # for newly written private tail blocks)
+            for slot in group:
+                self.prefix_cache.insert(
+                    self._exec_key(slot), slot.request.prompt_tokens,
+                    self.kvpool.tables[slot.request.request_id])
         return dt
+
+    # ------------------------------------------------------------------
+    # shared-prefix radix cache (splice, COW, stats)
+    # ------------------------------------------------------------------
+
+    def _exec_key(self, slot: Slot):
+        """Execution identity under which prefix KV is shareable: KV at
+        depth > 0 depends on the residual stream, hence on the adapter
+        and on merged- vs unmerged-LoRA execution."""
+        return (slot.merged, slot.request.selected_adapter)
+
+    def _admission_exec_key(self, req: Request, dlora_mode: str):
+        """The execution identity a request will run under, when it is
+        already determined at admission time (every policy except
+        AAS-routed edgelora, where the router picks the adapter at
+        SELECTING). None → unknown: admission reserves conservatively
+        and the prefix match happens at selection instead."""
+        policy = self.ecfg.policy
+        if policy == "llamacpp":
+            return (True, req.true_adapter)
+        if policy == "dlora":
+            # merged-mode admissions only pass the gate on the folded
+            # adapter; mode cannot flip between admission and selection
+            # (switching requires a fully drained batch)
+            return (dlora_mode == "merged", req.true_adapter)
+        if req.adapter_id is not None:
+            return (False, req.adapter_id)
+        if policy == "edgelora_no_aas":
+            return (False, req.true_adapter)
+        return None
+
+    def _admit_prefix(self, req: Request, exec_key) -> int:
+        """Admission-time prefix adoption (execution identity known):
+        match, splice shared pages, allocate only the suffix. Returns
+        the prefix length served from cache (0 on a miss)."""
+        blocks = self.prefix_cache.match(exec_key, req.prompt_tokens)
+        matched = len(blocks) * self.kvpool.block_size
+        prefix_len = min(matched, req.prompt_len - 1)
+        if prefix_len <= 0:
+            blocks, matched, prefix_len = [], 0, 0
+        pair = self.kvpool.adopt_prefix(req.request_id, blocks,
+                                        req.prompt_len,
+                                        cow_last=prefix_len < matched)
+        st = self.prefix_cache.stats
+        if pair is not None:
+            src, dst = pair
+            self.cache = self._copy_block(self.cache, jnp.int32(src),
+                                          jnp.int32(dst))
+            st.cow_copies += 1
+        if prefix_len:
+            st.hit_requests += 1
+            st.hit_tokens += matched
+            st.saved_prefill_tokens += prefix_len
+        return prefix_len
+
+    def _attach_prefix(self, slot: Slot) -> None:
+        """At SELECTING→PREFILL (adapter now known): match the longest
+        cached block-aligned prefix, splice those physical pages into the
+        sequence's block table (releasing the private pages admission
+        reserved for that span — capacity accounting stays conservative,
+        so deferral/preemption semantics are unchanged), and shrink the
+        upcoming prefill to the suffix. A whole-prompt block-aligned
+        match keeps one suffix token to re-prefill (first-token logits
+        need it): the write lands inside the last shared page, which is
+        copied on write."""
+        req = slot.request
+        slot.prefix_len = 0
+        blocks = self.prefix_cache.match(self._exec_key(slot),
+                                         req.prompt_tokens)
+        if not blocks:
+            return
+        matched = len(blocks) * self.kvpool.block_size
+        prefix_len = min(matched, req.prompt_len - 1)
+        if prefix_len <= 0:
+            return
+        pair = self.kvpool.replace_prefix(req.request_id, blocks,
+                                          cow_last=prefix_len < matched)
+        st = self.prefix_cache.stats
+        if pair is not None:
+            src, dst = pair
+            self.cache = self._copy_block(self.cache, jnp.int32(src),
+                                          jnp.int32(dst))
+            st.cow_copies += 1
+        st.hit_requests += 1
+        st.hit_tokens += matched
+        st.saved_prefill_tokens += prefix_len
+        slot.prefix_len = prefix_len
 
     def _padded_prompt(self, req: Request, bucket: int) -> jax.Array:
         toks = np.zeros((bucket,), np.int32)

@@ -57,7 +57,19 @@ class KVPoolStats:
 
 
 class PagedKVPool:
-    """Fixed arena of KV pages with per-sequence block tables."""
+    """Fixed arena of KV pages with per-sequence block tables.
+
+    Blocks are **ref-counted**: a physical page may be held by several
+    sequences at once (shared prompt-prefix pages spliced in by
+    ``replace_prefix``) and/or by the prefix cache
+    (``serving/prefix_cache.py``, which holds one ref per radix node).
+    ``release``/``drop_ref`` decrement; a block returns to the free list
+    only at refcount zero. An optional ``reclaimer`` (the prefix cache)
+    extends capacity: blocks held *only* by the cache form an LRU pool
+    that ``can_allocate``/``can_append`` count as available and that
+    allocation evicts on demand — reclaim happens *before* the engine's
+    deferral/preemption machinery ever sees an exhausted arena.
+    """
 
     def __init__(self, n_blocks: int, block_size: int):
         assert n_blocks > 0 and block_size > 0
@@ -66,6 +78,10 @@ class PagedKVPool:
         self.free: List[int] = list(range(n_blocks))[::-1]
         self.tables: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
+        self.refs: Dict[int, int] = {}
+        # duck-typed prefix cache: .reclaimable() -> int,
+        # .reclaim(k) -> int, .note_block_ref(blk) (refcount-change hook)
+        self.reclaimer: Optional[Any] = None
         self.stats = KVPoolStats()
 
     # ------------------------------------------------------------------
@@ -81,15 +97,52 @@ class PagedKVPool:
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
+    def _check_seq(self, seq_id: int) -> None:
+        if seq_id not in self.tables:
+            raise KeyError(
+                f"seq {seq_id} not registered in KV pool (released twice, "
+                "or used before register()?)")
+
+    def _available(self) -> int:
+        """Free blocks plus cache-held blocks the reclaimer could evict
+        right now (an exact lower bound — see ``PrefixCache.reclaimable``)."""
+        extra = self.reclaimer.reclaimable() if self.reclaimer else 0
+        return len(self.free) + extra
+
+    def _take_block(self) -> int:
+        """Pop a free block, evicting one cached block first if needed.
+        Callers must have checked ``_available()``."""
+        if not self.free and self.reclaimer is not None:
+            self.reclaimer.reclaim(1)
+        blk = self.free.pop()
+        self.refs[blk] = 1
+        self.stats.allocs += 1
+        return blk
+
+    def add_ref(self, blk: int) -> None:
+        self.refs[blk] += 1
+        if self.reclaimer is not None:
+            self.reclaimer.note_block_ref(blk)
+
+    def drop_ref(self, blk: int) -> None:
+        self.refs[blk] -= 1
+        if self.refs[blk] <= 0:
+            del self.refs[blk]
+            self.free.append(blk)
+            self.stats.frees += 1
+        if self.reclaimer is not None:
+            self.reclaimer.note_block_ref(blk)
+
     def can_allocate(self, n_tokens: int) -> bool:
         """Would registering a fresh sequence of ``n_tokens`` succeed?
         (Admission gate: check *before* registering so a refusal leaves
         no table behind.)"""
-        return self.blocks_for(n_tokens) <= len(self.free)
+        return self.blocks_for(n_tokens) <= self._available()
 
     def can_append(self, seq_id: int, n: int = 1) -> bool:
+        self._check_seq(seq_id)
         needed = self.blocks_for(self.lengths[seq_id] + n)
-        return needed - len(self.tables[seq_id]) <= len(self.free)
+        return needed - len(self.tables[seq_id]) <= self._available()
 
     def register(self, seq_id: int) -> None:
         assert seq_id not in self.tables, seq_id
@@ -97,19 +150,23 @@ class PagedKVPool:
         self.lengths[seq_id] = 0
 
     def release(self, seq_id: int) -> None:
+        """Drop the sequence's hold on its pages (shared pages survive
+        while other sequences or the prefix cache still reference them).
+        Releasing an unknown/already-released seq raises ``KeyError``."""
+        self._check_seq(seq_id)
         for blk in self.tables.pop(seq_id):
-            self.free.append(blk)
-            self.stats.frees += 1
+            self.drop_ref(blk)
         del self.lengths[seq_id]
 
     def append_tokens(self, seq_id: int, n: int = 1) -> List[int]:
         """Extend seq by n tokens, allocating pages on demand. Returns the
         (possibly empty) list of newly allocated physical blocks."""
+        self._check_seq(seq_id)
         table = self.tables[seq_id]
         length = self.lengths[seq_id]
         needed = -(-(length + n) // self.block_size)
         n_new = needed - len(table)
-        if n_new > len(self.free):
+        if n_new > self._available():
             # all-or-nothing: never leave a partially-extended table
             self.stats.oom_events += 1
             raise OutOfBlocksError(
@@ -118,13 +175,78 @@ class PagedKVPool:
                 f"{self.block_size} tokens")
         new = []
         for _ in range(n_new):
-            blk = self.free.pop()
+            blk = self._take_block()
             table.append(blk)
             new.append(blk)
-            self.stats.allocs += 1
         self.lengths[seq_id] = length + n
         self.stats.peak_used = max(self.stats.peak_used, self.used_blocks)
         return new
+
+    def adopt_prefix(self, seq_id: int, shared: List[int], n_tokens: int,
+                     cow_last: bool = False) -> Optional[Tuple[int, int]]:
+        """Build a freshly registered (empty) sequence's table as shared
+        prefix pages + newly allocated private suffix pages, in one
+        atomic step — the prefix-aware admission path, which never holds
+        private pages for the shared span (no transient footprint).
+
+        All shared blocks are held (ref'd) *before* any allocation so
+        on-demand reclaim cannot evict the pages being adopted; with
+        ``cow_last`` the final shared block's hold is then swapped for a
+        private copy-on-write page and ``(src, dst)`` returned for the
+        device-side copy. Callers guarantee capacity via the admission
+        gate ``can_allocate(n_tokens + 1)``: the +1 headroom block is
+        exactly what the COW copy consumes when the prompt is
+        block-aligned (the only case COW arises).
+        """
+        self._check_seq(seq_id)
+        assert not self.tables[seq_id] and not self.lengths[seq_id], seq_id
+        n_total = self.blocks_for(n_tokens)
+        assert len(shared) <= n_total, (seq_id, shared, n_tokens)
+        for blk in shared:
+            self.add_ref(blk)
+        table = list(shared)
+        pair = None
+        if cow_last:
+            dst = self._take_block()
+            table[-1] = dst
+            pair = (shared[-1], dst)
+            self.drop_ref(shared[-1])
+        for _ in range(n_total - len(shared)):
+            table.append(self._take_block())
+        self.tables[seq_id] = table
+        self.lengths[seq_id] = n_tokens
+        self.stats.peak_used = max(self.stats.peak_used, self.used_blocks)
+        return pair
+
+    def replace_prefix(self, seq_id: int, shared: List[int],
+                       cow_last: bool = False) -> Optional[Tuple[int, int]]:
+        """Splice cached prefix pages into a freshly admitted sequence.
+
+        The sequence's first ``len(shared)`` table entries (private,
+        just-allocated, never written) are released and replaced by the
+        shared physical blocks (ref-counted holds). With ``cow_last`` the
+        final shared block is **copied on write** instead of held: the
+        sequence's prefill/decode will write inside it (a partial-block
+        append onto a shared page), so a private copy is allocated and
+        ``(src, dst)`` returned for the caller's device-side page copy.
+        The preceding releases guarantee the copy allocation succeeds.
+        """
+        self._check_seq(seq_id)
+        table = self.tables[seq_id]
+        assert len(shared) <= len(table), (seq_id, shared, table)
+        for old in table[:len(shared)]:
+            self.drop_ref(old)
+        hold = shared[:-1] if cow_last else shared
+        for blk in hold:
+            self.add_ref(blk)
+        new_prefix = list(shared)
+        pair = None
+        if cow_last:
+            dst = self._take_block()
+            new_prefix[-1] = dst
+            pair = (shared[-1], dst)
+        self.tables[seq_id] = new_prefix + table[len(shared):]
+        return pair
 
     def slot_of(self, seq_id: int, pos: int):
         """(physical block, offset) of token ``pos`` of sequence seq_id."""
@@ -402,6 +524,116 @@ def scatter_prefill(arena_cache: Dict, mini_cache: Dict, tables, lengths,
                 out, path, anode.at[:, slot_idx].set(mnode.astype(anode.dtype)))
 
     walk(arena_cache, mini_cache, ())
+    return out
+
+
+def prefix_unsupported_reason(cache: Dict, max_ctx: int) -> Optional[str]:
+    """Why prefix sharing cannot be bit-exact for this cache template
+    (None when it can).
+
+    Sharing splices *per-position* KV pages between sequences, so it
+    needs every cache node to (a) be a plain attention ring of full
+    ``max_ctx`` length — window-local rings lose positions to
+    pad-overwrites that depend on the donor's prefill bucket — (b) store
+    unquantized values — int8 pages re-quantize on write, so a suffix
+    attending over dequantized prefix KV would diverge from the cold
+    full prefill — and (c) carry no per-sequence recurrent state (SSM
+    conv/state, cross-attention K/V), which has no per-position pages to
+    share.
+    """
+    reasons: List[str] = []
+
+    def walk(node, path):
+        name = "/".join(path) or "<root>"
+        if _is_attn_node(node):
+            if path and path[0] == "shared":
+                # weight-tied shared-attention block: forward_stack's
+                # prefix plumbing covers plain attention slots only
+                reasons.append(f"weight-tied shared-attention ring at "
+                               f"{name}")
+            if node["k"].shape[-3] < max_ctx:
+                reasons.append(
+                    f"window-local ring at {name} (clen "
+                    f"{node['k'].shape[-3]} < max_ctx {max_ctx})")
+            if "k_scale" in node:
+                reasons.append(f"int8-quantized KV cache at {name}")
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], path + (k,))
+        else:
+            reasons.append(f"per-sequence recurrent state at {name}")
+
+    walk(cache, ())
+    return reasons[0] if reasons else None
+
+
+def gather_prefix(arena_cache: Dict, tables, prefix_len: int,
+                  meta: PagedMeta) -> Dict:
+    """Gather positions [0, prefix_len) of every attention node out of
+    the page arena: a tree mirroring the cache structure whose leaves are
+    [ng, B, prefix_len, ...]. ``prefix_len`` is static (one jit shape per
+    distinct prefix length). Callers guarantee every gathered position
+    was written by a donor prefill (prefix matching is block-aligned and
+    capped below the donor's prompt length), so no validity mask is
+    needed — exactly the dense positions a cold prefill would attend to.
+    """
+    b = tables.shape[0]
+    pos = jnp.broadcast_to(
+        jnp.arange(prefix_len, dtype=jnp.int32)[None, :], (b, prefix_len))
+    blk, off = _page_coords(meta, tables, pos)
+    out: Dict[str, Any] = {}
+    for path, _clen in meta.attn_paths:
+        node = _node_at(arena_cache, path)
+        sub = {key: leaf[:, blk, off] for key, leaf in node.items()}
+        d = out
+        for k in path[:-1]:
+            d = d.setdefault(k, {})
+        d[path[-1]] = sub
+    return out
+
+
+def scatter_suffix(arena_cache: Dict, mini_cache: Dict, tables, lengths,
+                   prefix_len: int, suffix_len: int,
+                   meta: PagedMeta) -> Dict:
+    """Land a suffix prefill's fresh KV into the paged cache.
+
+    The mini cache's ring was bulk-written at positions
+    [prefix_len, prefix_len + suffix_len) (``cache_fill`` with offset
+    positions; prefix sharing is gated to clen == max_ctx ≥ bucket, so
+    ring index == position, no wrap). Entries that are real prompt
+    tokens (p < length) scatter to their pages; pad entries — and the
+    replica rows of power-of-two group padding, which share tables and
+    rewrite identical data — land idempotently (pads in the trash
+    block). Prefix-shared configs have no non-attention leaves (see
+    ``prefix_unsupported_reason``), so only attention nodes move.
+    """
+    out = arena_cache
+    lengths_b = jnp.asarray(lengths, jnp.int32)[:, None]
+    positions = prefix_len + jnp.arange(suffix_len, dtype=jnp.int32)
+    for path, clen in meta.attn_paths:
+        anode = _node_at(arena_cache, path)
+        mnode = _node_at(mini_cache, path)
+        p = jnp.where(positions[None, :] < lengths_b,
+                      positions[None, :], -1)               # [B, sfx]
+        blk, off = _page_coords(meta, tables, p)
+        idx = positions % clen
+        new_node = {}
+        for key, leaf in anode.items():
+            mini = mnode[key][:, :, idx]                    # [ng, B, sfx, ...]
+            new_node[key] = leaf.at[:, blk, off].set(mini.astype(leaf.dtype))
+        out = _replace_at(out, path, new_node)
+    return out
+
+
+def copy_block(arena_cache: Dict, src, dst, meta: PagedMeta) -> Dict:
+    """Copy-on-write page copy: physical block ``src`` → ``dst`` on every
+    attention leaf (scalars, traced — one jit shape covers all copies)."""
+    out = arena_cache
+    for path, _clen in meta.attn_paths:
+        node = _node_at(arena_cache, path)
+        new_node = {key: leaf.at[:, dst].set(leaf[:, src])
+                    for key, leaf in node.items()}
+        out = _replace_at(out, path, new_node)
     return out
 
 

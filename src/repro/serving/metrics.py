@@ -44,6 +44,11 @@ class ServingSummary:
     # counts — {backend, n_blocks, block_size, allocs, frees, peak_used,
     # oom_events, deferrals, preemptions}
     kv_stats: Optional[Dict] = None
+    # shared-prefix radix cache accounting (prefix_cache=True only):
+    # PrefixStats fields — {enabled, lookups, hit_requests, hit_tokens,
+    # saved_prefill_tokens, cow_copies, reclaimed_blocks,
+    # inserted_blocks, cached_blocks, peak_cached_blocks}
+    prefix_stats: Optional[Dict] = None
 
     def row(self) -> Dict[str, float]:
         return {k: getattr(self, k) for k in (
@@ -70,6 +75,18 @@ class ServingSummary:
                 f"peak_blocks={kv['peak_used']};"
                 f"defer={kv['deferrals']};preempt={kv['preemptions']};"
                 f"peak_active={self.peak_active_slots}")
+
+    def prefix_row(self) -> str:
+        """Compact shared-prefix-cache digest (same single-CSV-column
+        contract); 'prefix=off' when the run didn't enable it."""
+        ps = self.prefix_stats
+        if not ps:
+            return "prefix=off"
+        return (f"prefix=on;hits={ps['hit_requests']}/{ps['lookups']};"
+                f"hit_toks={ps['hit_tokens']};"
+                f"saved_toks={ps['saved_prefill_tokens']};"
+                f"cow={ps['cow_copies']};reclaimed={ps['reclaimed_blocks']};"
+                f"cached={ps['cached_blocks']}")
 
 
 def summarize(requests: List[Request], duration: float,

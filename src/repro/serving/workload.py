@@ -5,11 +5,17 @@ cv=1 is Poisson, cv>1 bursty. The optimal adapter for each request is
 drawn from a power-law over adapters, P(i) ∝ i^(−α): lower α concentrates
 traffic (high locality). Input/output lengths are uniform in [Il, Iu] /
 [Ol, Ou]. All parameters mirror the paper's Table 3 defaults.
+
+Multi-tenant system prompts: with ``system_prompt_len > 0`` every adapter
+gets its own fixed system prompt (drawn once per adapter from a dedicated
+stream), and a ``shared_prefix_frac`` fraction of each adapter's requests
+open with it before their unique tail — the repeated per-tenant prefix
+the shared-prefix KV cache (``serving/prefix_cache.py``) exploits.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -23,12 +29,42 @@ class WorkloadConfig:
     request_rate: float = 0.5     # R (req/s)
     cv: float = 1.0               # burstiness
     duration: float = 300.0       # trace length (s); paper default 5 min
-    input_range: tuple = (8, 256)     # [Il, Iu]
-    output_range: tuple = (8, 128)    # [Ol, Ou]
+    input_range: Tuple[int, int] = (8, 256)     # [Il, Iu] (unique tail)
+    output_range: Tuple[int, int] = (8, 128)    # [Ol, Ou]
     # fraction of requests that explicitly pin an adapter (bypass AAS)
     explicit_adapter_frac: float = 0.0
+    # per-adapter shared system prompt: requests open with their
+    # adapter's fixed system_prompt_len tokens (before the unique tail
+    # drawn from input_range); shared_prefix_frac of each adapter's
+    # requests carry it (the rest are prefix-cold)
+    system_prompt_len: int = 0
+    shared_prefix_frac: float = 1.0
     vocab_size: int = 512
     seed: int = 0
+
+    def __post_init__(self):
+        il, iu = self.input_range
+        ol, ou = self.output_range
+        if not (0 < il <= iu):
+            raise ValueError(f"input_range must satisfy 0 < Il <= Iu, "
+                             f"got {self.input_range}")
+        if not (0 < ol <= ou):
+            raise ValueError(f"output_range must satisfy 0 < Ol <= Ou, "
+                             f"got {self.output_range}")
+        if not self.request_rate > 0:
+            raise ValueError(f"request_rate must be > 0, "
+                             f"got {self.request_rate}")
+        if not self.cv > 0:
+            raise ValueError(f"cv must be > 0, got {self.cv}")
+        if not self.n_adapters > 0:
+            raise ValueError(f"n_adapters must be > 0, "
+                             f"got {self.n_adapters}")
+        if self.system_prompt_len < 0:
+            raise ValueError(f"system_prompt_len must be >= 0, "
+                             f"got {self.system_prompt_len}")
+        if not 0.0 <= self.shared_prefix_frac <= 1.0:
+            raise ValueError(f"shared_prefix_frac must be in [0, 1], "
+                             f"got {self.shared_prefix_frac}")
 
 
 def adapter_popularity(n: int, alpha: float) -> np.ndarray:
@@ -36,11 +72,24 @@ def adapter_popularity(n: int, alpha: float) -> np.ndarray:
     return w / w.sum()
 
 
+def system_prompts(cfg: WorkloadConfig) -> Dict[int, np.ndarray]:
+    """The per-adapter system prompts a trace opens its requests with
+    (deterministic in (seed, adapter) — a dedicated stream, so changing
+    trace-length knobs never reshuffles tenant prompts)."""
+    if cfg.system_prompt_len <= 0:
+        return {}
+    srng = np.random.default_rng([cfg.seed, 0xED6E])
+    return {i: srng.integers(0, cfg.vocab_size, cfg.system_prompt_len,
+                             dtype=np.int32)
+            for i in range(cfg.n_adapters)}
+
+
 def generate_trace(cfg: WorkloadConfig) -> List[Request]:
     rng = np.random.default_rng(cfg.seed)
     probs = adapter_popularity(cfg.n_adapters, cfg.alpha)
     shape = 1.0 / (cfg.cv ** 2)
     scale = cfg.cv ** 2 / cfg.request_rate
+    sys_prompts = system_prompts(cfg)
 
     reqs: List[Request] = []
     t = 0.0
@@ -55,6 +104,10 @@ def generate_trace(cfg: WorkloadConfig) -> List[Request]:
         plen = int(rng.integers(il, iu + 1))
         olen = int(rng.integers(ol, ou + 1))
         explicit = rng.uniform() < cfg.explicit_adapter_frac
+        tokens = rng.integers(0, cfg.vocab_size, plen, dtype=np.int32)
+        if sys_prompts and rng.uniform() < cfg.shared_prefix_frac:
+            tokens = np.concatenate([sys_prompts[adapter], tokens])
+            plen += cfg.system_prompt_len
         reqs.append(Request(
             request_id=rid,
             arrival_time=t,
@@ -62,8 +115,7 @@ def generate_trace(cfg: WorkloadConfig) -> List[Request]:
             output_len=olen,
             adapter_id=adapter if explicit else None,
             true_adapter=adapter,
-            prompt_tokens=rng.integers(0, cfg.vocab_size, plen,
-                                       dtype=np.int32),
+            prompt_tokens=tokens,
         ))
         rid += 1
     return reqs

@@ -115,6 +115,117 @@ def test_free_blocks_property_tracks_free_list():
     assert p.free_blocks == 6
 
 
+def test_unknown_seq_raises_clear_keyerror():
+    """release/can_append/append_tokens on a never-registered (or
+    already-released) seq fail with an explanatory KeyError, not a raw
+    dict lookup error."""
+    p = PagedKVPool(n_blocks=4, block_size=4)
+    for op in (lambda: p.release(9), lambda: p.can_append(9),
+               lambda: p.append_tokens(9, 1)):
+        with pytest.raises(KeyError, match="not registered"):
+            op()
+
+
+def test_double_release_is_explicit_error():
+    """Both the preemption and the completion path call release; a
+    double call (engine bookkeeping bug) must fail loudly — and must
+    not double-free blocks into the free list."""
+    p = PagedKVPool(n_blocks=4, block_size=4)
+    p.register(0)
+    p.append_tokens(0, 6)
+    p.release(0)
+    assert p.free_blocks == 4
+    with pytest.raises(KeyError, match="released twice"):
+        p.release(0)
+    assert p.free_blocks == 4 and p.stats.frees == p.stats.allocs == 2
+
+
+def test_refcounted_shared_blocks_free_at_zero():
+    p = PagedKVPool(n_blocks=8, block_size=4)
+    p.register(0)
+    shared = p.append_tokens(0, 8)              # two full blocks
+    p.register(1)
+    p.adopt_prefix(1, shared, 10)               # shares both + 1 private
+    assert all(p.refs[b] == 2 for b in shared)
+    assert p.used_blocks == 3
+    p.release(0)
+    assert all(p.refs[b] == 1 for b in shared)  # survive the donor
+    assert p.used_blocks == 3
+    p.release(1)
+    assert p.used_blocks == 0 and p.stats.frees == p.stats.allocs
+
+
+def test_adopt_prefix_cow_allocates_private_copy():
+    p = PagedKVPool(n_blocks=8, block_size=4)
+    p.register(0)
+    shared = p.append_tokens(0, 8)
+    p.register(1)
+    pair = p.adopt_prefix(1, shared, 8, cow_last=True)
+    src, dst = pair
+    assert src == shared[-1] and dst not in shared
+    assert p.tables[1] == [shared[0], dst]
+    assert p.refs[shared[0]] == 2               # held
+    assert p.refs[shared[-1]] == 1              # NOT held (copied)
+    assert p.refs[dst] == 1
+
+
+def test_replace_prefix_swaps_reserved_blocks():
+    """The conservative admission path: a fully reserved table swaps its
+    leading private blocks for shared ones, returning them to the free
+    list (no net footprint growth)."""
+    p = PagedKVPool(n_blocks=12, block_size=4)
+    p.register(0)
+    shared = p.append_tokens(0, 8)
+    p.register(1)
+    p.append_tokens(1, 11)                      # 3 private blocks
+    used_before = p.used_blocks
+    p.replace_prefix(1, shared)
+    assert p.tables[1][:2] == shared
+    assert p.used_blocks == used_before - 2     # two privates freed
+    assert all(p.refs[b] == 2 for b in shared)
+
+
+class _StubReclaimer:
+    """Minimal reclaimer contract: a bag of evictable blocks."""
+
+    def __init__(self, pool, blocks):
+        self.pool, self.blocks = pool, list(blocks)
+
+    def reclaimable(self):
+        return len(self.blocks)
+
+    def reclaim(self, k):
+        n = 0
+        while self.blocks and n < k:
+            self.pool.drop_ref(self.blocks.pop(0))
+            n += 1
+        return n
+
+    def note_block_ref(self, blk):
+        pass
+
+
+def test_reclaimer_extends_capacity_exactly():
+    """can_allocate/can_append/append_tokens count reclaimable blocks
+    as available and evict them on demand — never one more."""
+    p = PagedKVPool(n_blocks=4, block_size=4)
+    p.register(0)
+    held = p.append_tokens(0, 16)               # arena full
+    for b in held:
+        p.add_ref(b)                            # simulate cache holds
+    p.release(0)                                # now cache-only
+    p.reclaimer = _StubReclaimer(p, held)
+    assert p.free_blocks == 0
+    assert p.can_allocate(16) and not p.can_allocate(17)
+    p.register(1)
+    got = p.append_tokens(1, 12)                # 3 blocks via reclaim
+    assert len(got) == 3 and p.free_blocks == 0
+    assert p.reclaimer.reclaimable() == 1
+    assert p.can_append(1, 4) and not p.can_append(1, 5)
+    with pytest.raises(OutOfBlocksError):
+        p.append_tokens(1, 8)
+
+
 def test_interleaved_sequences_isolated():
     rng = np.random.default_rng(1)
     p = PagedKVPool(n_blocks=8, block_size=4)

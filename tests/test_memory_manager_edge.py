@@ -83,3 +83,63 @@ def test_prefill_random_idempotent_and_dedup():
     m.prefill_random([3, 4])
     assert m.n_resident == 3          # tops up the single free slot
     assert 3 in m and 4 not in m
+
+
+def test_lfu_tie_break_deterministic_across_replays():
+    """Identical op sequences must evict identically — scheduling
+    determinism (and the stream-parity suites) depend on it."""
+    def replay():
+        m = AdapterMemoryManager(3, policy="lfu")
+        evicted = []
+        for a in (1, 2, 3, 2, 4, 5, 1, 6):     # forces several evictions
+            before = {x for x in (1, 2, 3, 4, 5, 6) if x in m}
+            m.acquire(a)
+            after = {x for x in (1, 2, 3, 4, 5, 6) if x in m}
+            evicted.extend(sorted(before - after))
+        return evicted, sorted(x for x in range(1, 7) if x in m)
+    assert replay() == replay()
+
+
+def test_lfu_tie_prefers_earliest_resident_after_churn():
+    """The tie-break stays insertion-ordered even after the OrderedDict
+    has been reshuffled by evictions and re-insertions."""
+    m = AdapterMemoryManager(2, policy="lfu")
+    m.acquire(1)
+    m.acquire(2)
+    m.acquire(3)                      # tie 1v2 -> evict 1; resident {2,3}
+    assert 1 not in m
+    m.acquire(1)                      # tie 2v3 -> evict 2; resident {3,1}
+    assert 2 not in m and 3 in m and 1 in m
+    m.acquire(4)                      # counts: 3:1, 1:2 -> evict 3
+    assert 3 not in m and 1 in m and 4 in m
+
+
+def test_prefill_random_overflow_keeps_pool_consistent():
+    """More adapters than max_resident: exactly max_resident load, the
+    rest are ignored, and a later acquire of an ignored adapter evicts
+    normally (no free-slot accounting drift)."""
+    m = AdapterMemoryManager(3)
+    m.prefill_random(list(range(10)))
+    assert m.n_resident == 3 and not m.free_slots
+    assert all(a in m for a in (0, 1, 2)) and 3 not in m
+    slot, loaded = m.acquire(7)       # evicts LRU (adapter 0)
+    assert loaded and 7 in m and 0 not in m
+    assert m.n_resident == 3 and 0 <= slot < 3
+
+
+def test_pin_unpin_underflow_then_normal_cycle():
+    """An unpin storm on a never-pinned adapter stays a no-op: the next
+    real pin still protects it through that many unpins."""
+    m = AdapterMemoryManager(2)
+    m.acquire(1)
+    for _ in range(5):
+        m.unpin(1)                    # underflow attempts: all no-ops
+    assert 1 not in m.pinned
+    m.pin(1)
+    m.acquire(2)
+    m.pin(2)
+    with pytest.raises(RuntimeError):
+        m.acquire(3)                  # both pinned: nothing evictable
+    m.unpin(1)
+    m.acquire(3)                      # 1 unpinned -> evictable
+    assert 1 not in m and 3 in m

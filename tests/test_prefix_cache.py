@@ -1,0 +1,348 @@
+"""Shared-prefix radix KV cache: ref-counted COW pages over the arena.
+
+The contract mirrors PR 3's paged-vs-dense suite: turning the prefix
+cache on is *not allowed to change a single token*. Warm (prefix-hit)
+streams must be bit-identical to cold streams under every scheduler
+policy and both LoRA backends, while ``ServingSummary.prefix_stats``
+shows real savings; COW covers whole-prompt block-aligned matches; and
+under a tight arena the LRU reclaim pool extends capacity *before* the
+deferral/preemption machinery engages.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.slots import Request
+from repro.serving.engine import EdgeLoRAEngine, EngineConfig
+from repro.serving.kvpool import PagedKVPool
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.workload import WorkloadConfig, generate_trace
+
+
+def _cfg(n_adapters=4, max_resident=8, **kw):
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    if kw:
+        cfg = dataclasses.replace(
+            cfg, attn=dataclasses.replace(cfg.attn, **kw))
+    return dataclasses.replace(
+        cfg, lora=dataclasses.replace(cfg.lora, n_adapters=n_adapters,
+                                      max_resident=max_resident))
+
+
+def _ecfg(**kw):
+    base = dict(n_slots=4, max_ctx=48, prompt_buckets=(16, 32),
+                policy="edgelora_no_aas", memory_budget=1e12,
+                kv_backend="paged", kv_block_size=8, prefix_cache=True)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _sys_trace(cfg, n, sys_len=16, n_adapters=2, seed=0, olen=4,
+               tail=(4, 8)):
+    """Per-adapter system prompts: every request opens with its
+    adapter's fixed prefix, then a unique tail."""
+    rng = np.random.default_rng(seed)
+    sys_p = {a: rng.integers(0, cfg.vocab_size, sys_len, dtype=np.int32)
+             for a in range(n_adapters)}
+    reqs = []
+    for i in range(n):
+        a = i % n_adapters
+        toks = np.concatenate([
+            sys_p[a],
+            rng.integers(0, cfg.vocab_size, int(rng.integers(*tail)),
+                         dtype=np.int32)])
+        reqs.append(Request(
+            request_id=i, arrival_time=0.0, prompt_len=len(toks),
+            output_len=olen, true_adapter=a, prompt_tokens=toks))
+    return reqs
+
+
+def _tokens(trace):
+    return {r.request_id: tuple(r.tokens) for r in trace}
+
+
+def _serve(cfg, trace, **ecfg_kw):
+    eng = EdgeLoRAEngine(cfg, _ecfg(**ecfg_kw))
+    summary = eng.serve(trace)
+    return eng, summary, _tokens(trace)
+
+
+# ---------------------------------------------------------------------------
+# bit-identical streams: prefix cache on vs off
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["edgelora", "edgelora_no_aas",
+                                    "llamacpp", "dlora"])
+def test_streams_identical_all_policies(policy):
+    cfg = _cfg()
+    t_off = _sys_trace(cfg, 8, seed=1)
+    t_on = _sys_trace(cfg, 8, seed=1)
+    _, s_off, off = _serve(cfg, t_off, policy=policy, prefix_cache=False)
+    _, s_on, on = _serve(cfg, t_on, policy=policy, prefix_cache=True)
+    assert s_off.n_completed == s_on.n_completed == 8
+    assert off == on
+    ps = s_on.prefix_stats
+    assert ps["hit_requests"] > 0
+    assert ps["saved_prefill_tokens"] > 0
+    assert s_off.prefix_stats is None
+
+
+def test_streams_identical_sgmv_backend():
+    cfg = _cfg()
+    t_off = _sys_trace(cfg, 6, seed=2)
+    t_on = _sys_trace(cfg, 6, seed=2)
+    _, _, off = _serve(cfg, t_off, prefix_cache=False,
+                       lora_backend="sgmv")
+    _, s_on, on = _serve(cfg, t_on, prefix_cache=True,
+                         lora_backend="sgmv")
+    assert off == on
+    assert s_on.prefix_stats["saved_prefill_tokens"] > 0
+
+
+def test_cold_trace_unaffected():
+    """Unique prompts (no shared prefixes): the cache holds the pages
+    but never hits, and streams equal the prefix-off run."""
+    cfg = _cfg()
+    rng = np.random.default_rng(3)
+    def trace():
+        return [Request(request_id=i, arrival_time=0.0,
+                        prompt_len=len(toks[i]), output_len=4,
+                        true_adapter=i % 4, prompt_tokens=toks[i])
+                for i in range(6)]
+    toks = [rng.integers(0, cfg.vocab_size, int(rng.integers(9, 14)),
+                         dtype=np.int32) for _ in range(6)]
+    t_off, t_on = trace(), trace()
+    _, _, off = _serve(cfg, t_off, prefix_cache=False)
+    _, s_on, on = _serve(cfg, t_on, prefix_cache=True)
+    assert off == on
+    assert s_on.prefix_stats["hit_requests"] == 0
+    assert s_on.prefix_stats["inserted_blocks"] > 0
+
+
+def test_cow_on_block_aligned_full_match():
+    """Whole prompt == one shared block-aligned prefix: the last prompt
+    token is re-prefilled into a COW page — streams still identical."""
+    cfg = _cfg()
+    rng = np.random.default_rng(4)
+    sys_p = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+    def trace():
+        return [Request(request_id=i, arrival_time=0.0, prompt_len=16,
+                        output_len=4, true_adapter=1,
+                        prompt_tokens=sys_p.copy())
+                for i in range(4)]
+    t_off, t_on = trace(), trace()
+    _, _, off = _serve(cfg, t_off, prefix_cache=False, n_slots=2)
+    eng, s_on, on = _serve(cfg, t_on, prefix_cache=True, n_slots=2)
+    assert off == on
+    assert s_on.prefix_stats["cow_copies"] > 0
+    assert s_on.prefix_stats["hit_requests"] > 0
+
+
+def test_workload_system_prompts_end_to_end():
+    """generate_trace(system_prompt_len=...) drives real sharing through
+    the engine: saved tokens accumulate and streams match cold."""
+    cfg = _cfg()
+    wl = WorkloadConfig(n_adapters=3, request_rate=20.0, duration=0.5,
+                        input_range=(4, 10), output_range=(3, 5),
+                        system_prompt_len=16, vocab_size=cfg.vocab_size,
+                        seed=5)
+    t_off, t_on = generate_trace(wl), generate_trace(wl)
+    assert len(t_off) >= 4
+    _, _, off = _serve(cfg, t_off, prefix_cache=False)
+    _, s_on, on = _serve(cfg, t_on, prefix_cache=True)
+    assert off == on
+    assert s_on.prefix_stats["saved_prefill_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# capacity: LRU reclaim before deferral/preemption
+# ---------------------------------------------------------------------------
+
+
+def test_reclaim_extends_capacity_before_deferral():
+    """Distinct prompts churn through a tight arena: cached pages are
+    reclaimed on demand (no deferral needed), every request completes,
+    and whatever remains used at the end is exactly the cache's hold."""
+    cfg = _cfg(n_adapters=8)
+    rng = np.random.default_rng(6)
+    def trace():
+        return [Request(request_id=i, arrival_time=0.0, prompt_len=16,
+                        output_len=4, true_adapter=i % 8,
+                        prompt_tokens=toks[i])
+                for i in range(10)]
+    toks = [rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+            for _ in range(10)]
+    t_on = trace()
+    eng, s, on = _serve(cfg, t_on, n_slots=2, kv_arena_blocks=8)
+    assert s.n_completed == 10
+    assert s.prefix_stats["reclaimed_blocks"] > 0
+    assert s.kv_stats["deferrals"] == 0
+    assert s.kv_stats["oom_events"] == 0
+    # end state: all used blocks are cache-held, refcounts consistent
+    assert eng.kvpool.used_blocks == len(eng.prefix_cache.nodes)
+    assert all(eng.kvpool.refs[b] == 1 for b in eng.prefix_cache.nodes)
+    # parity with the cold run
+    t_off = trace()
+    _serve(cfg, t_off, n_slots=2, kv_arena_blocks=8, prefix_cache=False)
+    assert on == _tokens(t_off)
+
+
+def test_shared_pages_survive_release_until_evicted():
+    """A completed donor's prompt pages stay in the arena (cache hold),
+    get re-spliced by a later identical prompt, and only leave through
+    LRU reclaim."""
+    cfg = _cfg()
+    rng = np.random.default_rng(7)
+    sys_p = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+    def req(i, t):
+        toks = np.concatenate([sys_p, rng.integers(
+            0, cfg.vocab_size, 4, dtype=np.int32)])
+        return Request(request_id=i, arrival_time=t, prompt_len=20,
+                       output_len=3, true_adapter=0, prompt_tokens=toks)
+    trace = [req(0, 0.0), req(1, 100.0)]  # strictly sequential
+    eng, s, _ = _serve(cfg, trace, n_slots=1)
+    assert s.n_completed == 2
+    ps = s.prefix_stats
+    assert ps["hit_requests"] == 1 and ps["hit_tokens"] == 16
+    # both requests' pages are released; the shared prefix pages remain
+    assert eng.kvpool.tables == {}
+    assert eng.kvpool.used_blocks == len(eng.prefix_cache.nodes) > 0
+
+
+# ---------------------------------------------------------------------------
+# gating
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_requires_paged_backend():
+    with pytest.raises(ValueError, match="paged"):
+        EdgeLoRAEngine(_cfg(), _ecfg(kv_backend="dense"))
+
+
+def test_prefix_cache_rejects_window_local_and_int8():
+    with pytest.raises(ValueError, match="window-local"):
+        EdgeLoRAEngine(
+            _cfg(layer_pattern=("local", "global"), sliding_window=8),
+            _ecfg())
+    with pytest.raises(ValueError, match="int8"):
+        EdgeLoRAEngine(_cfg(kv_cache_quant=True), _ecfg())
+
+
+def test_prefix_cache_rejects_ssm_state():
+    cfg = reduced_config(get_config("mamba2-130m"))
+    cfg = dataclasses.replace(
+        cfg, lora=dataclasses.replace(cfg.lora, n_adapters=2,
+                                      max_resident=2))
+    with pytest.raises(ValueError, match="recurrent state"):
+        EdgeLoRAEngine(cfg, _ecfg(n_slots=2, prompt_buckets=(16,)))
+
+
+def test_prefix_row_digest():
+    cfg = _cfg()
+    _, s_on, _ = _serve(cfg, _sys_trace(cfg, 4, seed=8))
+    row = s_on.prefix_row()
+    assert row.startswith("prefix=on;") and "saved_toks=" in row
+    _, s_off, _ = _serve(cfg, _sys_trace(cfg, 4, seed=8),
+                         prefix_cache=False)
+    assert s_off.prefix_row() == "prefix=off"
+
+
+# ---------------------------------------------------------------------------
+# unit: radix tree over a real pool
+# ---------------------------------------------------------------------------
+
+
+def _pool_with_seq(n_blocks=16, bs=4, seq=0, n_tokens=12):
+    pool = PagedKVPool(n_blocks, bs)
+    pool.register(seq)
+    pool.append_tokens(seq, n_tokens)
+    return pool
+
+
+def test_radix_match_is_longest_block_aligned_prefix():
+    pool = _pool_with_seq(n_tokens=12)          # 3 full blocks of 4
+    cache = PrefixCache(pool, 4)
+    toks = np.arange(12, dtype=np.int32)
+    cache.insert("k", toks, pool.tables[0])
+    assert cache.match("k", toks) == pool.tables[0][:3]
+    # partial final block never matches past the aligned boundary
+    assert cache.match("k", toks[:11]) == pool.tables[0][:2]
+    assert cache.match("k", toks[:3]) == []
+    # divergent tail stops the walk at the shared prefix
+    other = np.concatenate([toks[:8], np.array([99, 98, 97, 96],
+                                               np.int32)])
+    assert cache.match("k", other) == pool.tables[0][:2]
+    # different execution identity shares nothing
+    assert cache.match(("other", 1), toks) == []
+
+
+def test_radix_insert_refs_and_release_keeps_pages():
+    pool = _pool_with_seq(n_tokens=8)
+    cache = PrefixCache(pool, 4)
+    toks = np.arange(8, dtype=np.int32)
+    created = cache.insert("k", toks, pool.tables[0])
+    assert created == 2
+    blocks = list(pool.tables[0])
+    assert all(pool.refs[b] == 2 for b in blocks)
+    pool.release(0)
+    assert all(pool.refs[b] == 1 for b in blocks)
+    assert pool.used_blocks == 2                # cache keeps them
+    # re-insert of identical content is a no-op
+    pool.register(1)
+    pool.append_tokens(1, 8)
+    assert cache.insert("k", toks, pool.tables[1]) == 0
+
+
+def test_reclaimable_counts_only_fully_evictable_subtrees():
+    """A parent whose page is still held by a live sequence shields
+    nothing; a live *child* shields its cache-only parent (leaf-first
+    eviction cannot reach it yet)."""
+    pool = _pool_with_seq(n_tokens=8)           # blocks [b0, b1]
+    cache = PrefixCache(pool, 4)
+    toks = np.arange(8, dtype=np.int32)
+    cache.insert("k", toks, pool.tables[0])
+    assert cache.reclaimable() == 0             # seq still holds both
+    pool.release(0)
+    assert cache.reclaimable() == 2
+    # a new sequence adopts only the deeper block -> parent shielded
+    b0, b1 = list(cache.nodes)
+    child = cache.nodes[b1]
+    pool.add_ref(child.block)                   # simulate a live holder
+    assert cache.reclaimable() == 0
+    pool.drop_ref(child.block)
+    assert cache.reclaimable() == 2
+
+
+def test_reclaim_evicts_lru_leaves_first():
+    pool = PagedKVPool(16, 4)
+    cache = PrefixCache(pool, 4)
+    for seq, start in ((0, 0), (1, 100)):
+        pool.register(seq)
+        pool.append_tokens(seq, 8)
+        cache.insert("k", np.arange(start, start + 8, dtype=np.int32),
+                     pool.tables[seq])
+        pool.release(seq)
+    # chain A (older) and chain B (newer), 2 nodes each
+    assert len(cache) == 4 and cache.reclaimable() == 4
+    cache.match("k", np.arange(0, 8, dtype=np.int32))  # touch chain A
+    pool_free_before = len(pool.free)
+    assert cache.reclaim(2) == 2
+    assert len(pool.free) == pool_free_before + 2
+    # chain B (LRU) went first — chain A still matches
+    assert len(cache.match("k", np.arange(0, 8, dtype=np.int32))) == 2
+    assert cache.match("k", np.arange(100, 108, dtype=np.int32)) == []
+    # draining the rest empties the cache
+    assert cache.reclaim(10) == 2
+    assert len(cache) == 0 and len(pool.free) == 16
+
+
+def test_reclaim_respects_live_holders():
+    pool = _pool_with_seq(n_tokens=8)
+    cache = PrefixCache(pool, 4)
+    cache.insert("k", np.arange(8, dtype=np.int32), pool.tables[0])
+    assert cache.reclaim(10) == 0               # seq 0 still holds pages
+    pool.release(0)
+    assert cache.reclaim(10) == 2

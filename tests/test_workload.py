@@ -1,7 +1,9 @@
 """Synthetic workload generator (paper §5.1) statistics."""
 import numpy as np
+import pytest
 
-from repro.serving.workload import WorkloadConfig, adapter_popularity, generate_trace
+from repro.serving.workload import (WorkloadConfig, adapter_popularity,
+                                    generate_trace, system_prompts)
 
 
 def test_rate():
@@ -48,3 +50,59 @@ def test_lengths_in_bounds():
         assert 8 <= r.prompt_len <= 64
         assert 4 <= r.output_len <= 32
         assert r.prompt_tokens.shape == (r.prompt_len,)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(input_range=(10, 8)),
+    dict(input_range=(0, 8)),
+    dict(output_range=(5, 2)),
+    dict(request_rate=0.0),
+    dict(request_rate=-1.0),
+    dict(cv=0.0),
+    dict(n_adapters=0),
+    dict(system_prompt_len=-1),
+    dict(shared_prefix_frac=1.5),
+])
+def test_config_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        WorkloadConfig(**bad)
+
+
+def test_system_prompts_shared_per_adapter():
+    """Every request of an adapter opens with that adapter's fixed
+    system prompt; prompts differ across adapters; the unique tail
+    still follows input_range."""
+    cfg = WorkloadConfig(n_adapters=4, request_rate=30, duration=10,
+                         input_range=(4, 12), system_prompt_len=16,
+                         seed=9)
+    sys_p = system_prompts(cfg)
+    assert len(sys_p) == 4
+    assert not np.array_equal(sys_p[0], sys_p[1])
+    trace = generate_trace(cfg)
+    assert len(trace) > 10
+    for r in trace:
+        np.testing.assert_array_equal(r.prompt_tokens[:16],
+                                      sys_p[r.true_adapter])
+        assert 16 + 4 <= r.prompt_len <= 16 + 12
+        assert r.prompt_tokens.shape == (r.prompt_len,)
+
+
+def test_shared_prefix_frac_zero_disables_prefixing():
+    base = dict(n_adapters=2, request_rate=30, duration=5,
+                input_range=(4, 8), seed=11)
+    t_zero = generate_trace(WorkloadConfig(system_prompt_len=16,
+                                           shared_prefix_frac=0.0, **base))
+    # frac=0: no request carries a system prompt — lengths stay in the
+    # unprefixed input_range
+    assert len(t_zero) > 10
+    assert all(4 <= r.prompt_len <= 8 for r in t_zero)
+
+
+def test_system_prompts_deterministic_in_seed():
+    cfg = WorkloadConfig(system_prompt_len=8, seed=3, n_adapters=3)
+    a, b = system_prompts(cfg), system_prompts(cfg)
+    for i in range(3):
+        np.testing.assert_array_equal(a[i], b[i])
+    c = system_prompts(WorkloadConfig(system_prompt_len=8, seed=4,
+                                      n_adapters=3))
+    assert any(not np.array_equal(a[i], c[i]) for i in range(3))
