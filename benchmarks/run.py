@@ -11,8 +11,9 @@ import time
 
 def main() -> None:
     t0 = time.time()
-    from benchmarks import (batched_lora_micro, paged_kv, prefill_batching,
-                            prefix_cache, router_bench, serving_tables)
+    from benchmarks import (adapter_swap, batched_lora_micro, paged_kv,
+                            prefill_batching, prefix_cache, router_bench,
+                            serving_tables)
     print("name,us_per_call,derived")
     # paper tables on the serving engine
     serving_tables.table4_throughput_vs_adapters()
@@ -34,6 +35,9 @@ def main() -> None:
     # shared-prefix radix cache: warm-vs-cold prefill + arena footprint
     # vs tenancy (writes BENCH_prefix_cache.json)
     prefix_cache.main()
+    # async adapter swap-in vs the synchronous baseline on a cold-heavy
+    # workload (+ stream parity; writes BENCH_adapter_swap.json)
+    adapter_swap.main()
     # batched LoRA micro + kernels
     batched_lora_micro.fig6_batched_vs_sequential()
     batched_lora_micro.backend_einsum_vs_sgmv()

@@ -3,10 +3,12 @@
 A fixed number of slots bounds concurrency (and therefore batch shapes —
 static shapes mean no XLA recompilation at runtime). Each slot walks:
 
-    IDLE -> SELECTING -> PREFILL -> GENERATE -> IDLE
+    IDLE -> SELECTING [-> LOADING] -> PREFILL -> GENERATE -> IDLE
 
 SELECTING runs Algorithm 1 (adaptive adapter selection) unless the request
-pins an adapter explicitly; PREFILL decodes the prompt and emits the first
+pins an adapter explicitly; LOADING (async adapter swap-in only) waits on
+the host→HBM transfer channel's ``ready_time`` while *other* slots keep
+prefilling and decoding; PREFILL decodes the prompt and emits the first
 token; GENERATE iterates until the request's output length.
 """
 from __future__ import annotations
@@ -19,6 +21,7 @@ from typing import List, Optional
 class SlotState(enum.Enum):
     IDLE = "idle"
     SELECTING = "selecting"
+    LOADING = "loading"
     PREFILL = "prefill"
     GENERATE = "generate"
 
@@ -43,6 +46,15 @@ class Request:
     # generated token ids, in order (observable output: regression tests
     # compare these across engine configurations)
     tokens: List[int] = field(default_factory=list)
+    # the adapter this request ran under before a KV preemption (restart
+    # discards selected_adapter; the queue-ahead prefetcher uses the old
+    # choice as a warm-up hint when re-scoring would cost a forward)
+    prefetch_hint: Optional[int] = None
+    # the prefetcher's stash of this request's router scores (oracle
+    # scores are a pure function of (seed, request_id) — computing them
+    # once per request instead of once per scheduler tick keeps the
+    # stall-loop ticks cheap)
+    sel_scores: Optional[object] = None
 
 
 @dataclass
@@ -70,6 +82,9 @@ class Slot:
     # tokens of the prompt served from shared cached pages (prefix-cache
     # hit; 0 = cold). Prefill runs only on the remaining suffix.
     prefix_len: int = 0
+    # async adapter swap-in: sim time the slot's adapter transfer lands
+    # (the LOADING state waits on it; meaningless outside LOADING)
+    ready_time: float = 0.0
 
     def assign(self, req: Request) -> None:
         assert self.state == SlotState.IDLE
@@ -81,6 +96,7 @@ class Slot:
         self.bucket = None
         self.padded_prompt = None
         self.prefix_len = 0
+        self.ready_time = 0.0
 
     def release(self) -> Request:
         req = self.request
@@ -92,6 +108,7 @@ class Slot:
         self.bucket = None
         self.padded_prompt = None
         self.prefix_len = 0
+        self.ready_time = 0.0
         return req
 
 

@@ -73,6 +73,31 @@ def main(argv=None) -> int:
     ap.add_argument("--shared-prefix-frac", type=float, default=1.0,
                     help="fraction of each adapter's requests that open "
                          "with its system prompt")
+    ap.add_argument("--async-swap", dest="async_swap",
+                    action="store_true", default=True,
+                    help="asynchronous adapter swap-in (default): a pool "
+                         "miss books a transfer on the serialized "
+                         "host→HBM channel and the slot waits in LOADING "
+                         "while other slots keep running; the clock only "
+                         "stalls when every runnable slot is load-blocked")
+    ap.add_argument("--no-async-swap", dest="async_swap",
+                    action="store_false",
+                    help="synchronous swap-in: every pool miss charges "
+                         "adapter_bytes/disk_bandwidth straight to the "
+                         "global clock (the pre-async baseline; token "
+                         "streams are identical either way except that "
+                         "cache-aware AAS with --top-k > 1 reads pool "
+                         "residency at selection time by design, so "
+                         "timing shifts can steer which adapter it picks)")
+    ap.add_argument("--prefetch-depth", type=int, default=4,
+                    help="queue-ahead prefetch: warm the pool for up to "
+                         "this many waiting/requeued requests with a "
+                         "known (or score-predicted) adapter; 0 disables "
+                         "(async swap only)")
+    ap.add_argument("--disk-bandwidth", type=float, default=1.0e9,
+                    help="adapter swap-in bytes/s (host→HBM transfer "
+                         "channel; lower values make cold adapters "
+                         "costlier and the async/prefetch win larger)")
     ap.add_argument("--no-prefill-batching", dest="prefill_batching",
                     action="store_false",
                     help="one B=1 prefill per slot (pre-batching baseline)")
@@ -112,6 +137,8 @@ def main(argv=None) -> int:
         kv_backend=args.kv_backend, kv_block_size=args.kv_block_size,
         kv_arena_blocks=args.kv_arena_blocks,
         prefix_cache=args.prefix_cache,
+        async_swap=args.async_swap, prefetch_depth=args.prefetch_depth,
+        disk_bandwidth=args.disk_bandwidth,
         prefill_batching=args.prefill_batching,
         router_batching=args.router_batching, seed=args.seed)
     try:
@@ -133,7 +160,7 @@ def main(argv=None) -> int:
               f"slo={summary.slo_attainment:.1%} "
               f"hit_rate={summary.cache_hit_rate:.1%} "
               f"{summary.batching_row()} {summary.kv_row()} "
-              f"{summary.prefix_row()}")
+              f"{summary.prefix_row()} {summary.swap_row()}")
     return 0
 
 

@@ -30,13 +30,35 @@ group (each unique shape is warmed uncharged on first use, so compile
 never pollutes the timeline). Two simulation cost-model knobs cover the
 traffic that compute steps don't measure (DESIGN.md §8):
 
-* ``disk_bandwidth`` (bytes/s) — adapter swap-in: every pool miss charges
-  ``adapter_bytes / disk_bandwidth`` sim-seconds (the paper's disk→RAM
-  swap; host→HBM here).
+* ``disk_bandwidth`` (bytes/s) — adapter swap-in: every pool miss costs
+  ``adapter_bytes / disk_bandwidth`` sim-seconds of host→HBM transfer
+  (the paper's disk→RAM swap), serialized on one transfer channel.
 * ``mem_bandwidth`` (bytes/s) — weight-sized merge/unmerge traffic: the
   llamacpp and dlora-merged policies charge ``2 · adapter_bytes /
   mem_bandwidth`` per merge and per unmerge (read + write of the touched
   weight rows).
+
+Asynchronous adapter swap-in (``EngineConfig.async_swap``, on by
+default): a pool miss no longer stalls the global clock. The manager
+returns a reservation whose ``ready_time`` accounts for channel
+serialization; the slot parks in LOADING while every *other* slot keeps
+prefilling and decoding — the clock only stalls (``load_stall_seconds``)
+when all runnable slots are load-blocked. A queue-ahead prefetcher warms
+the pool for waiting/requeued requests whose adapter is already known
+(explicit ``adapter_id``, the edgelora_no_aas / dlora policies) or
+cheaply predictable (a bookkeeping-only router scores waiting requests
+for free; a preempted request's prior selection is reused), bounded by
+``prefetch_depth`` and by free+evictable blocks so speculation never
+evicts a pinned or sooner-needed adapter. ``async_swap=False`` reverts
+to the synchronous model — each load charged to the clock at acquire.
+Whenever the request→adapter mapping is residency-independent (explicit
+``adapter_id``, edgelora_no_aas, llamacpp, dlora, and AAS with
+``top_k=1``), token streams are bit-identical between the two modes
+(only timing moves; regression-tested). Cache-aware AAS at top_k>1
+consults what is resident *at selection time* by design — the paper's
+quality↔latency trade — so there timing shifts can legitimately steer
+selection (this is inherent to the policy, not to async swap: any
+timing-shifting knob moves it).
 
 Batched-LoRA compute backend: ``EngineConfig.lora_backend`` ('auto' by
 default, falling back to ``ModelConfig.lora_backend``) selects how the
@@ -149,6 +171,24 @@ class EngineConfig:
     # families (window-local rings, int8 KV, SSM/cross state) raise at
     # engine init — see kvpool.prefix_unsupported_reason.
     prefix_cache: bool = False
+    # asynchronous adapter swap-in: a pool miss books a transfer on the
+    # serialized host→HBM channel and the slot waits in LOADING while
+    # other slots keep running; the clock only stalls when every
+    # runnable slot is load-blocked. False reverts to the synchronous
+    # model (every load charged straight to the global clock at acquire
+    # — the pre-async baseline the adapter_swap benchmark compares
+    # against). Token streams are identical either way whenever the
+    # request→adapter mapping is residency-independent (explicit
+    # adapters, no_aas, llamacpp, dlora, AAS with top_k=1); cache-aware
+    # AAS at top_k>1 reads residency at selection time by design, so
+    # timing shifts can steer *selection* there (see module docstring).
+    async_swap: bool = True
+    # queue-ahead prefetch (async_swap only): warm the pool for up to
+    # this many waiting/requeued requests whose adapter is already known
+    # or predictable from cached router scores; 0 disables. Bounded by
+    # free+evictable pool blocks — prefetch never evicts a pinned or
+    # sooner-needed adapter.
+    prefetch_depth: int = 4
     disk_bandwidth: float = 1.0e9    # adapter swap-in bytes/s (host->HBM)
     mem_bandwidth: float = 60.0e9    # merge/unmerge traffic (llama.cpp mode)
     memory_budget: float = 6.0e9     # adapter memory budget (llamacpp preload)
@@ -205,15 +245,16 @@ class EdgeLoRAEngine:
 
         self.manager = AdapterMemoryManager(
             self.n_pool, load_fn=self._load_adapter,
-            policy=engine_cfg.cache_policy)
+            policy=engine_cfg.cache_policy,
+            load_seconds=self.adapter_bytes / engine_cfg.disk_bandwidth)
         self.slots = SlotManager(engine_cfg.n_slots)
-        self._pending_load_cost = 0.0
         self._build_steps()
         self._durations: Dict[Any, float] = {}
         self.busy_time = 0.0
+        # init prefill is free (server start): prefill_random books no
+        # transfer-channel time
         self.manager.prefill_random(list(range(
             min(cfg.lora.n_adapters, self.n_pool))))
-        self._pending_load_cost = 0.0  # init prefill is free (server start)
 
     # ------------------------------------------------------------------
     # device-side adapter pool (heterogeneous memory manager, device face)
@@ -228,6 +269,10 @@ class EdgeLoRAEngine:
         return self.model.init_lora(jax.random.PRNGKey(10_000 + adapter_id))
 
     def _load_adapter(self, adapter_id: int, slot: int) -> None:
+        """Device-side pool write. The *cost* of the transfer is not
+        charged here: the manager books it on its transfer channel and
+        returns it on the reservation (the old ``_pending_load_cost``
+        side-channel, retired)."""
         adapter = self._adapter_host(adapter_id)
         new_pool = {}
         for key, sub in self.lora_pool.items():
@@ -236,7 +281,6 @@ class EdgeLoRAEngine:
                 lambda p, a: jax.lax.dynamic_update_index_in_dim(
                     p, a.astype(p.dtype), slot, axis=ax), sub, adapter[key])
         self.lora_pool = new_pool
-        self._pending_load_cost += self.adapter_bytes / self.ecfg.disk_bandwidth
 
     # ------------------------------------------------------------------
     # jit'd compute steps
@@ -490,6 +534,15 @@ class EdgeLoRAEngine:
         self.kv_deferrals = 0
         self.kv_preemptions = 0
         self.peak_active_slots = 0
+        # adapter swap-in accounting: clock time spent waiting on the
+        # transfer channel (sync charges every load here; async only the
+        # jumps where all runnable slots were load-blocked), plus the
+        # serve-relative load count for total-transfer-time bookkeeping.
+        # The channel restarts with the clock — a previous serve()'s
+        # channel_free_at must not charge phantom queueing at now=0.
+        self.load_stall_seconds = 0.0
+        self._serve_loads0 = self.manager.stats.loads
+        self.manager.reset_channel()
         active_adapter: Optional[int] = None  # llamacpp single-active mode
         dlora_mode = "unmerged"               # dlora dynamic mode
         dlora_merged_adapter: Optional[int] = None
@@ -632,17 +685,14 @@ class EdgeLoRAEngine:
                     slot.merged = dlora_mode == "merged"
                     if not slot.merged:
                         try:
-                            pool_slot, _ = self.manager.acquire(
-                                req.selected_adapter)
+                            res = self.manager.acquire(
+                                req.selected_adapter, now=now)
                         except PoolExhaustedError:
                             continue  # pool fully pinned: defer (see below)
-                        self.manager.pin(req.selected_adapter)
-                        now += self._pending_load_cost
-                        self._pending_load_cost = 0.0
-                        slot.adapter_slot = pool_slot
+                        now = self._finish_acquire(slot, res, now)
                     else:
                         slot.adapter_slot = 0
-                    slot.state = SlotState.PREFILL
+                        slot.state = SlotState.PREFILL
                     progressed = True
                     continue
                 slot.merged = False
@@ -687,31 +737,41 @@ class EdgeLoRAEngine:
                     req.selected_adapter = aid
                 if ecfg.policy != "llamacpp":
                     try:
-                        pool_slot, loaded = self.manager.acquire(
-                            req.selected_adapter)
+                        res = self.manager.acquire(
+                            req.selected_adapter, now=now)
                     except PoolExhaustedError:
                         # every pool block is pinned by an in-flight
                         # request (γ > R under adapter-diverse load):
                         # leave the slot SELECTING and retry after a
                         # completion unpins — pins are only held by
-                        # PREFILL/GENERATE slots, so the loop always
-                        # progresses elsewhere
+                        # LOADING/PREFILL/GENERATE slots, so the loop
+                        # always progresses elsewhere
                         continue
-                    self.manager.pin(req.selected_adapter)
-                    now += self._pending_load_cost
-                    self._pending_load_cost = 0.0
+                    slot.sel_scores = None
+                    now = self._finish_acquire(slot, res, now)
                 else:
-                    pool_slot = 0  # merged weights: adapter rides W
-                slot.sel_scores = None
-                slot.adapter_slot = pool_slot
+                    slot.sel_scores = None
+                    slot.adapter_slot = 0  # merged weights: adapter rides W
+                    slot.state = SlotState.PREFILL
                 if self.prefix_enabled and \
                         self._admission_exec_key(req, dlora_mode) is None:
                     # AAS-routed: the adapter was unknown at admission —
                     # match now and swap shared pages into the reserved
                     # table (capacity accounting stays conservative)
                     self._attach_prefix(slot)
-                slot.state = SlotState.PREFILL
                 progressed = True
+
+            # ---- async swap-in: transfers that have landed ------------
+            if ecfg.async_swap:
+                for slot in self.slots.in_state(SlotState.LOADING):
+                    if slot.ready_time <= now:
+                        slot.state = SlotState.PREFILL
+                        progressed = True
+                # queue-ahead prefetch: start transfers for upcoming
+                # demand while the channel would otherwise sit idle
+                # (behind any demand loads booked this tick)
+                if ecfg.prefetch_depth > 0 and ecfg.policy != "llamacpp":
+                    self._run_prefetch(now, queue, qi, dlora_mode)
 
             # ---- prefill (gather→batch→scatter) ----------------------
             prefilling = self.slots.in_state(SlotState.PREFILL)
@@ -802,12 +862,25 @@ class EdgeLoRAEngine:
                         completed.append(slot.release())
                 progressed = True
 
-            # ---- idle: jump to next arrival ---------------------------
+            # ---- idle / load-blocked: jump to the earliest event ------
             if not progressed:
-                if self._requeue:
+                loading = self.slots.in_state(SlotState.LOADING)
+                if loading:
+                    wake = min(s.ready_time for s in loading)
+                    if not self._requeue and qi < len(queue):
+                        arr = max(now, queue[qi].arrival_time)
+                        if now < arr < wake:
+                            now = arr  # an arrival may unblock admission
+                            continue
+                    # every runnable slot is load-blocked: the clock
+                    # stalls on the transfer channel — the serialization
+                    # async swap-in exists to minimize
+                    self.load_stall_seconds += max(0.0, wake - now)
+                    now = max(now, wake)
+                elif self._requeue:
                     continue  # unreachable in practice: requeued work
                     # re-admits (or an active slot progresses) next tick
-                if qi < len(queue):
+                elif qi < len(queue):
                     now = max(now, queue[qi].arrival_time)
                 else:
                     break
@@ -823,6 +896,20 @@ class EdgeLoRAEngine:
                         "preemptions": self.kv_preemptions}
         prefix_stats = (self.prefix_cache.summary()
                         if self.prefix_enabled else None)
+        mst = self.manager.stats
+        total_load = ((mst.loads - self._serve_loads0)
+                      * self.manager.load_seconds)
+        swap_stats = {
+            "mode": "async" if ecfg.async_swap else "sync",
+            "load_seconds_total": total_load,
+            "load_stall_seconds": self.load_stall_seconds,
+            "overlapped_load_seconds": max(
+                0.0, total_load - self.load_stall_seconds),
+            "prefetch_issued": mst.prefetch_issued,
+            "prefetch_hits": mst.prefetch_hits,
+            "prefetch_waste": mst.prefetch_waste,
+            "cancelled_loads": mst.cancelled_loads,
+        }
         return summarize(queue, duration, ecfg.slo_seconds,
                          cache_stats=self.manager.stats,
                          energy_proxy=self.busy_time / duration,
@@ -835,6 +922,7 @@ class EdgeLoRAEngine:
                              "peak_active_slots": self.peak_active_slots,
                              "kv_stats": kv_stats,
                              "prefix_stats": prefix_stats,
+                             "swap_stats": swap_stats,
                          })
 
     def _prefill_group(self, bucket: int, merged: bool, prefix_len: int,
@@ -1027,6 +1115,106 @@ class EdgeLoRAEngine:
         return jnp.asarray(toks)
 
     # ------------------------------------------------------------------
+    # adapter swap-in (reservation routing, queue-ahead prefetch)
+    # ------------------------------------------------------------------
+
+    def _finish_acquire(self, slot: Slot, res, now: float) -> float:
+        """Pin the reserved adapter and route the slot by swap mode:
+        async parks it in LOADING until the transfer's ready_time (other
+        slots keep prefilling/decoding); sync stalls the clock to
+        ready_time — the single explicit charge per load that replaced
+        the old ``_pending_load_cost`` side-channel. Returns the
+        (possibly advanced) clock."""
+        self.manager.pin(res.adapter_id)
+        slot.adapter_slot = res.slot
+        if self.ecfg.async_swap:
+            if res.ready_time > now:
+                slot.ready_time = res.ready_time
+                slot.state = SlotState.LOADING
+            else:
+                slot.state = SlotState.PREFILL
+            return now
+        if res.ready_time > now:
+            self.load_stall_seconds += res.ready_time - now
+            now = res.ready_time
+        slot.state = SlotState.PREFILL
+        return now
+
+    def _known_adapter(self, req: Request, dlora_mode: str) -> Optional[int]:
+        """The pool adapter a waiting request will demand, when already
+        determined (None: AAS picks at SELECTING, or the policy runs
+        merged and never touches the pool)."""
+        if req.adapter_id is not None:
+            return req.adapter_id
+        policy = self.ecfg.policy
+        if policy == "edgelora_no_aas":
+            return req.true_adapter
+        if policy == "dlora" and dlora_mode != "merged":
+            return req.true_adapter
+        return None
+
+    def _predicted_adapter(self, req: Request,
+                           dlora_mode: str) -> Optional[int]:
+        """Known adapter, or a cheap AAS prediction: a bookkeeping-only
+        router (oracle) scores a waiting request for free, so we can run
+        the cache-aware selection it will make on admission; a learned
+        router's forward costs a prompt pass, so only the selection the
+        request ran under before a KV preemption is reused. None: not
+        predictable, or already resident (nothing to warm)."""
+        aid = self._known_adapter(req, dlora_mode)
+        if aid is not None:
+            return aid
+        if self.ecfg.policy != "edgelora":
+            return None
+        if not getattr(self.router, "costs_forward", False):
+            if req.sel_scores is None:  # once per request, not per tick
+                req.sel_scores = np.asarray(self.router.scores(req))
+            aid, cached = select_adapter(req.sel_scores, self.manager,
+                                         self.ecfg.top_k)
+            return None if cached else aid
+        return req.prefetch_hint
+
+    def _run_prefetch(self, now: float, queue: List[Request], qi: int,
+                      dlora_mode: str) -> None:
+        """Queue-ahead prefetch: start swap-ins for upcoming demand so
+        the transfer channel overlaps with compute. Targets, nearest
+        first: KV-preempted requeue, then arrived-but-unadmitted queue
+        entries — each with a known adapter or a cheap AAS prediction
+        (``_predicted_adapter``). Bounded by ``prefetch_depth``; the
+        whole lookahead window is passed as the manager's protect set,
+        so a colder prefetch can never evict a hotter (sooner-needed)
+        adapter — and pins protect the rest. (Pool-deferred SELECTING
+        slots are *not* targets: deferral means every block is pinned,
+        and the moment one frees, the slot's own demand acquire — which
+        runs before the prefetcher every tick — takes it.)"""
+        ecfg = self.ecfg
+        targets: List[int] = []
+        waiting = self._requeue + [
+            r for r in queue[qi:qi + 4 * ecfg.prefetch_depth]
+            if r.arrival_time <= now]
+        for r in waiting:
+            aid = self._predicted_adapter(r, dlora_mode)
+            if aid is not None:
+                targets.append(aid)
+        seen: set = set()
+        todo: List[int] = []
+        for aid in targets:
+            if aid not in seen:
+                seen.add(aid)
+                todo.append(aid)
+        todo = todo[:ecfg.prefetch_depth]
+        protect = set(todo)
+        # saturation guard: speculation must never book the serialized
+        # channel more than a lookahead window ahead of the clock — a
+        # demand load issued next tick would otherwise queue behind a
+        # pile of speculative transfers
+        horizon = now + ecfg.prefetch_depth * self.manager.load_seconds
+        for aid in todo:
+            if self.manager.channel_free_at > horizon:
+                break
+            self.manager.prefetch(aid, now=now, protect=protect)
+
+    # ------------------------------------------------------------------
     # paged-KV scheduling (block tables, preemption)
     # ------------------------------------------------------------------
 
@@ -1086,8 +1274,11 @@ class EdgeLoRAEngine:
         req = slot.request
         self.kvpool.release(req.request_id)
         if self.ecfg.policy != "llamacpp" and not slot.merged \
-                and slot.state in (SlotState.PREFILL, SlotState.GENERATE):
+                and slot.state in (SlotState.LOADING, SlotState.PREFILL,
+                                   SlotState.GENERATE):
             self.manager.unpin(req.selected_adapter)
+        if req.selected_adapter is not None:
+            req.prefetch_hint = req.selected_adapter
         req.selected_adapter = None
         req.first_token_time = None
         req.generated = 0

@@ -49,6 +49,14 @@ class ServingSummary:
     # saved_prefill_tokens, cow_copies, reclaimed_blocks,
     # inserted_blocks, cached_blocks, peak_cached_blocks}
     prefix_stats: Optional[Dict] = None
+    # adapter swap-in accounting — {mode (sync|async),
+    # load_seconds_total (host→HBM transfer time initiated this serve),
+    # load_stall_seconds (clock time stalled on the transfer channel:
+    # sync charges every load here; async only the jumps where every
+    # runnable slot was load-blocked), overlapped_load_seconds
+    # (total − stall: transfer time hidden behind compute),
+    # prefetch_issued/hits/waste, cancelled_loads}
+    swap_stats: Optional[Dict] = None
 
     def row(self) -> Dict[str, float]:
         return {k: getattr(self, k) for k in (
@@ -75,6 +83,20 @@ class ServingSummary:
                 f"peak_blocks={kv['peak_used']};"
                 f"defer={kv['deferrals']};preempt={kv['preemptions']};"
                 f"peak_active={self.peak_active_slots}")
+
+    def swap_row(self) -> str:
+        """Compact adapter swap-in digest (same single-CSV-column
+        contract as ``batching_row``)."""
+        sw = self.swap_stats
+        if not sw:
+            return "swap=n/a"
+        return (f"swap={sw['mode']};"
+                f"load_s={sw['load_seconds_total']:.3f};"
+                f"stall_s={sw['load_stall_seconds']:.3f};"
+                f"overlap_s={sw['overlapped_load_seconds']:.3f};"
+                f"pf={sw['prefetch_hits']}/{sw['prefetch_issued']};"
+                f"waste={sw['prefetch_waste']};"
+                f"cancel={sw['cancelled_loads']}")
 
     def prefix_row(self) -> str:
         """Compact shared-prefix-cache digest (same single-CSV-column

@@ -114,6 +114,26 @@ def test_lfu_tie_prefers_earliest_resident_after_churn():
     assert 3 not in m and 1 in m and 4 in m
 
 
+def test_prefill_random_dedups_before_capping():
+    """Duplicate ids must not under-fill the pool: the old code truncated
+    to max_resident *before* deduplicating, so prefill_random([0,0,1,1])
+    with max_resident=2 loaded only adapter 0 and stranded a free slot."""
+    m = AdapterMemoryManager(2)
+    m.prefill_random([0, 0, 1, 1])
+    assert 0 in m and 1 in m
+    assert m.n_resident == 2
+    assert not m.free_slots
+
+
+def test_prefill_random_dedup_preserves_first_occurrence_order():
+    """With more unique ids than blocks, the *earliest* ids win (the
+    caller ranks them; dedup must not reshuffle)."""
+    m = AdapterMemoryManager(2)
+    m.prefill_random([5, 3, 5, 7, 3, 9])
+    assert 5 in m and 3 in m
+    assert 7 not in m and 9 not in m
+
+
 def test_prefill_random_overflow_keeps_pool_consistent():
     """More adapters than max_resident: exactly max_resident load, the
     rest are ignored, and a later acquire of an ignored adapter evicts
