@@ -13,7 +13,7 @@ def main() -> None:
     t0 = time.time()
     from benchmarks import (adapter_swap, batched_lora_micro, paged_kv,
                             prefill_batching, prefix_cache, router_bench,
-                            serving_tables)
+                            serving_tables, slo_scheduling)
     print("name,us_per_call,derived")
     # paper tables on the serving engine
     serving_tables.table4_throughput_vs_adapters()
@@ -38,6 +38,9 @@ def main() -> None:
     # async adapter swap-in vs the synchronous baseline on a cold-heavy
     # workload (+ stream parity; writes BENCH_adapter_swap.json)
     adapter_swap.main()
+    # chunked prefill pareto (short-TTFT tail vs throughput) + SLO
+    # admission control under overload (writes BENCH_slo_scheduling.json)
+    slo_scheduling.main()
     # batched LoRA micro + kernels
     batched_lora_micro.fig6_batched_vs_sequential()
     batched_lora_micro.backend_einsum_vs_sgmv()

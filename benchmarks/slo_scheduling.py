@@ -1,0 +1,319 @@
+"""SLO-driven scheduling benchmark: chunked prefill + admission control.
+
+Head-of-line blocking is the failure mode this PR's tentpole attacks: a
+burst of long prompts monopolizes the step loop with bucket-wide prefill
+calls while short interactive requests queue, so their TTFT tail grows
+by whole long-prefill widths. Chunked prefill (``prefill_chunk``) bounds
+every prefill call and interleaves the remainder with decode, trading a
+little total compute for a bounded per-iteration step time.
+
+Sweeps burst patterns × chunk sizes over a mixed short/long workload:
+
+* per-pattern pareto: short-request TTFT p99 vs total throughput at
+  each chunk size, over three gamma-renewal burst patterns plus a
+  dispatcher-style staggered collision pattern (a steady priority-0
+  short stream under periodic bucket-wide priority-1 long arrivals at
+  a wide context — the cell where head-of-line blocking is
+  mechanism-driven, not queue-order luck). Acceptance: some chunk
+  improves short-TTFT p99 on at least one pattern while keeping ≥ 95%
+  of the un-chunked throughput.
+* bounded step time: a solo long-prompt probe — one request served
+  alone, so ``max_step_seconds`` is exactly the largest single prefill
+  call — must charge strictly less per iteration when chunked (the
+  in-sweep step times are also recorded, but a scheduler iteration can
+  aggregate several chunk groups plus a decode, so only the solo cell
+  is asserted)
+* admission control: a tight-deadline interactive class under overload,
+  controller on vs off — sheds are recorded, and the TTFT tail of the
+  *served* interactive requests improves when hopeless work is rejected
+  at the queue head instead of occupying slots
+
+Writes ``BENCH_slo_scheduling.json`` (flat records, shared BENCH
+schema).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import emit, serving_cfg
+
+MAX_CTX = 192
+N_SLOTS = 4
+BUCKETS = (32, 192)
+CHUNKS = (None, 32, 64)
+
+# burst patterns: (cv, rate multiplier). High cv clumps arrivals so
+# long prompts pile up exactly when short ones queue behind them.
+PATTERNS = {
+    "steady": (1.0, 1.0),
+    "bursty": (3.0, 1.0),
+    "heavy_burst": (4.0, 1.5),
+}
+
+
+def _mixed_trace(cfg, *, rate, cv, duration, seed):
+    """Short interactive-ish requests + a long-prompt minority, via the
+    workload generator's dedicated long-prompt stream."""
+    from repro.serving.workload import WorkloadConfig, generate_trace
+    wl = WorkloadConfig(
+        n_adapters=cfg.lora.n_adapters, request_rate=rate, cv=cv,
+        duration=duration, input_range=(8, 24), output_range=(6, 12),
+        long_prompt_frac=0.25, long_input_range=(128, 160),
+        vocab_size=cfg.vocab_size, seed=seed)
+    return generate_trace(wl)
+
+
+def _staggered_trace(cfg, *, seed, duration, short_gap=0.025,
+                     long_every=1.0, long_range=(320, 384)):
+    """Dispatcher-style collision pattern: a steady stream of priority-0
+    interactive shorts with a bucket-wide priority-1 long arriving every
+    ``long_every`` seconds. Every long prefill lands *while* shorts are
+    in flight, so un-chunked the short stream repeatedly eats whole
+    long-prefill iterations — the head-of-line case in its purest form."""
+    from repro.core.slots import Request
+    rng = np.random.default_rng(seed)
+    trace = []
+    t = 0.0
+    while t < duration:
+        plen = int(rng.integers(8, 24))
+        trace.append(Request(
+            request_id=0, arrival_time=t, prompt_len=plen,
+            output_len=int(rng.integers(6, 12)),
+            true_adapter=int(rng.integers(0, cfg.lora.n_adapters)),
+            priority=0,
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen,
+                                       dtype=np.int32)))
+        t += short_gap
+    t = 0.1
+    while t < duration:
+        plen = int(rng.integers(*long_range))
+        trace.append(Request(
+            request_id=0, arrival_time=t, prompt_len=plen, output_len=8,
+            true_adapter=int(rng.integers(0, cfg.lora.n_adapters)),
+            priority=1,
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen,
+                                       dtype=np.int32)))
+        t += long_every
+    trace.sort(key=lambda r: r.arrival_time)
+    for i, r in enumerate(trace):
+        r.request_id = i
+    return trace
+
+
+def _engine(cfg, *, prefill_chunk: Optional[int] = None,
+            admission_control: bool = True, seed: int = 0,
+            n_slots: int = N_SLOTS, max_ctx: int = MAX_CTX,
+            buckets=BUCKETS):
+    from repro.serving.engine import EdgeLoRAEngine, EngineConfig
+    return EdgeLoRAEngine(cfg, EngineConfig(
+        n_slots=n_slots, max_ctx=max_ctx, prompt_buckets=buckets,
+        policy="edgelora_no_aas", memory_budget=1e12,
+        prefill_chunk=prefill_chunk, admission_control=admission_control,
+        seed=seed))
+
+
+def _short_ttft_p99(trace) -> float:
+    """TTFT p99 over the short-prompt majority — the tenants head-of-
+    line blocking punishes."""
+    ftl = [r.first_token_time - r.arrival_time for r in trace
+           if r.prompt_len <= 32 and r.first_token_time is not None]
+    return float(np.percentile(ftl, 99)) if ftl else float("nan")
+
+
+def chunk_sweep(records: List[Dict], smoke: bool = False) -> None:
+    # three gamma-renewal patterns at the small context, plus the
+    # staggered collision pattern at a wide context where a long
+    # prefill is genuinely expensive next to a decode step — that is
+    # the cell where the chunking win is mechanism-driven rather than
+    # queue-order luck, so it carries the pareto assert
+    duration = 3.0 if smoke else 8.0
+    base_rate = 4.0
+    cases = []
+    gamma = {"bursty": PATTERNS["bursty"]} if smoke else PATTERNS
+    for pname, (cv, rmul) in gamma.items():
+        cases.append(dict(
+            name=pname, chunks=(None, 64) if smoke else CHUNKS, cv=cv,
+            rate=base_rate * rmul,
+            trace=lambda cfg, cv=cv, rmul=rmul: _mixed_trace(
+                cfg, rate=base_rate * rmul, cv=cv, duration=duration,
+                seed=11),
+            engine=dict()))
+    stag_seeds = (11,) if smoke else (11, 12)
+    for seed in stag_seeds:
+        cases.append(dict(
+            name=f"staggered_long_s{seed}",
+            chunks=(None, 96) if smoke else (None, 48, 96),
+            cv=0.0, rate=1.0 / 0.025,
+            trace=lambda cfg, seed=seed: _staggered_trace(
+                cfg, seed=seed, duration=3.0 if smoke else 6.0),
+            engine=dict(max_ctx=416, buckets=(32, 384))))
+    any_pareto_win = False
+    for case in cases:
+        pname = case["name"]
+        chunks = case["chunks"]
+        cfg = serving_cfg(n_adapters=8)
+        cells: Dict[Optional[int], Dict] = {}
+        for chunk in chunks:
+            trace = case["trace"](cfg)
+            eng = _engine(cfg, prefill_chunk=chunk, **case["engine"])
+            s = eng.serve(trace)
+            short_p99 = _short_ttft_p99(trace)
+            cells[chunk] = {"short_ttft_p99": short_p99,
+                            "throughput": s.throughput,
+                            "max_step": s.max_step_seconds}
+            label = "none" if chunk is None else str(chunk)
+            emit(f"slo_scheduling/chunk/{pname}/chunk={label}",
+                 short_p99 * 1e6,
+                 f"completed={s.n_completed}/{s.n_requests},"
+                 f"tput={s.throughput:.3f},"
+                 f"ttft_p99={s.ttft_p99:.4f},"
+                 f"max_step={s.max_step_seconds:.4f}")
+            records.append({
+                "kind": "chunk_sweep", "pattern": pname,
+                "chunk": 0 if chunk is None else chunk,
+                "cv": case["cv"], "rate": case["rate"],
+                "n_requests": s.n_requests, "completed": s.n_completed,
+                "short_ttft_p99": short_p99, "ttft_p99": s.ttft_p99,
+                "tpot_p99": s.tpot_p99, "throughput": s.throughput,
+                "max_step_seconds": s.max_step_seconds,
+                "prefill_steps": s.prefill_steps,
+                "step_time_hist": s.step_time_hist,
+            })
+            assert s.n_completed == s.n_requests, (pname, chunk)
+        base = cells[None]
+        best = min((c for c in chunks if c is not None),
+                   key=lambda c: cells[c]["short_ttft_p99"])
+        win = (cells[best]["short_ttft_p99"] < base["short_ttft_p99"]
+               and cells[best]["throughput"] >= 0.95 * base["throughput"])
+        any_pareto_win = any_pareto_win or win
+        records.append({
+            "kind": "chunk_summary", "pattern": pname,
+            "best_chunk": best,
+            "short_ttft_p99_win":
+                base["short_ttft_p99"] / cells[best]["short_ttft_p99"],
+            "throughput_ratio":
+                cells[best]["throughput"] / base["throughput"],
+            "pareto_win": int(win),
+        })
+        emit(f"slo_scheduling/summary/{pname}", 0.0,
+             f"best_chunk={best},"
+             f"p99_win={base['short_ttft_p99'] / cells[best]['short_ttft_p99']:.2f}x,"
+             f"tput_ratio={cells[best]['throughput'] / base['throughput']:.3f}")
+    # acceptance: chunking pareto-improves the short-request TTFT tail
+    # on at least one burst pattern (full mode only: the smoke lane runs
+    # a single pattern/chunk cell where timing noise on a shared CI host
+    # can mask the win — bounded_step above is the structural assert)
+    if not smoke:
+        assert any_pareto_win, [r for r in records
+                                if r["kind"] == "chunk_summary"]
+
+
+def bounded_step_probe(records: List[Dict], smoke: bool = False) -> None:
+    """The structural bounded-step-time claim, isolated from scheduler
+    aggregation: one long request served alone. Un-chunked, a single
+    iteration charges the whole bucket-wide prefill; chunked, no
+    iteration can charge more than one chunk-wide slice (plus a decode
+    step) — the in-sweep ``max_step_seconds`` mixes several groups per
+    iteration, so only this solo cell makes the comparison clean."""
+    from repro.core.slots import Request
+    cfg = serving_cfg(n_adapters=2)
+    rng = np.random.default_rng(17)
+    plen = 160
+    cell: Dict[str, float] = {}
+    for chunk in (None, 32):
+        trace = [Request(
+            request_id=0, arrival_time=0.0, prompt_len=plen,
+            output_len=4, true_adapter=0,
+            prompt_tokens=rng.integers(0, cfg.vocab_size, plen,
+                                       dtype=np.int32))]
+        eng = _engine(cfg, prefill_chunk=chunk)
+        s = eng.serve(trace)
+        label = "none" if chunk is None else str(chunk)
+        cell[label] = s.max_step_seconds
+        emit(f"slo_scheduling/bounded_step/chunk={label}",
+             s.max_step_seconds * 1e6,
+             f"prefill_steps={s.prefill_steps},"
+             f"hist={';'.join(f'{k}:{v}' for k, v in sorted((s.step_time_hist or {}).items()))}")
+        records.append({
+            "kind": "bounded_step", "chunk": 0 if chunk is None else chunk,
+            "prompt_len": plen, "max_step_seconds": s.max_step_seconds,
+            "prefill_steps": s.prefill_steps,
+        })
+    # a 32-token slice must charge well under the 160-token prefill
+    assert cell["32"] < cell["none"], cell
+    records.append({"kind": "bounded_step_summary",
+                    "step_reduction": cell["none"] / cell["32"]})
+
+
+def admission_sweep(records: List[Dict], smoke: bool = False) -> None:
+    """Overloaded interactive class, controller on vs off: with the
+    controller on, hopeless requests shed at the queue head instead of
+    occupying slots, so the *served* interactive TTFT tail tightens."""
+    from repro.serving.workload import WorkloadConfig, generate_trace
+    cfg = serving_cfg(n_adapters=8)
+    duration = 3.0 if smoke else 6.0
+    # genuinely overloaded: a burst of long-prompt work swamps the four
+    # slots, so queue waits blow straight through the 50 ms deadline
+    wl = WorkloadConfig(
+        n_adapters=8, request_rate=30.0, cv=3.0, duration=duration,
+        input_range=(8, 24), output_range=(8, 16),
+        long_prompt_frac=0.3, long_input_range=(128, 160),
+        interactive_frac=0.5, interactive_ttft_slo=0.05,
+        vocab_size=cfg.vocab_size, seed=13)
+    cell: Dict[str, Dict] = {}
+    for mode, on in (("off", False), ("on", True)):
+        trace = generate_trace(wl)
+        eng = _engine(cfg, admission_control=on)
+        s = eng.serve(trace)
+        served_ftl = [r.first_token_time - r.arrival_time for r in trace
+                      if r.ttft_slo is not None
+                      and r.first_token_time is not None]
+        p99 = (float(np.percentile(served_ftl, 99)) if served_ftl
+               else float("nan"))
+        st = s.slo_stats["by_priority"].get(0, {})
+        cell[mode] = {"served_ttft_p99": p99,
+                      "rejected": s.shed_requests + s.timeout_requests,
+                      "attained": st.get("ttft_attained", 0),
+                      "eligible": st.get("ttft_eligible", 0)}
+        emit(f"slo_scheduling/admission/{mode}", p99 * 1e6,
+             f"shed={s.shed_requests},timeout={s.timeout_requests},"
+             f"attain={st.get('ttft_attained', 0)}/"
+             f"{st.get('ttft_eligible', 0)},"
+             f"tput={s.throughput:.3f}")
+        records.append({
+            "kind": "admission", "controller": mode,
+            "served_ttft_p99": p99,
+            "shed": s.shed_requests, "timeout": s.timeout_requests,
+            "ttft_attained": st.get("ttft_attained", 0),
+            "ttft_eligible": st.get("ttft_eligible", 0),
+            "throughput": s.throughput,
+        })
+    # the controller must actually act under this overload, and the
+    # interactive requests it *does* serve must see a tighter tail
+    assert cell["on"]["rejected"] > 0, cell
+    assert (cell["on"]["served_ttft_p99"]
+            <= cell["off"]["served_ttft_p99"]), cell
+    records.append({
+        "kind": "admission_summary",
+        "rejected": cell["on"]["rejected"],
+        "served_p99_win": (cell["off"]["served_ttft_p99"]
+                           / cell["on"]["served_ttft_p99"]),
+    })
+
+
+def main(json_path: str = "BENCH_slo_scheduling.json",
+         smoke: bool = False) -> None:
+    records: List[Dict] = []
+    chunk_sweep(records, smoke=smoke)
+    bounded_step_probe(records, smoke=smoke)
+    admission_sweep(records, smoke=smoke)
+    with open(json_path, "w") as f:
+        json.dump(records, f, indent=2, default=float)
+    emit("slo_scheduling/json", 0.0, f"wrote={json_path}")
+
+
+if __name__ == "__main__":
+    main()

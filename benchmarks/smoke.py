@@ -19,13 +19,15 @@ from benchmarks.schema import validate_bench_file
 
 def registry():
     """name -> (artifact path, main(json_path=..., smoke=True) callable)."""
-    from benchmarks import adapter_swap, paged_kv, prefill_batching, prefix_cache
+    from benchmarks import (adapter_swap, paged_kv, prefill_batching,
+                            prefix_cache, slo_scheduling)
 
     return {
         "prefill_batching": ("BENCH_prefill_batching.json", prefill_batching.main),
         "paged_kv": ("BENCH_paged_kv.json", paged_kv.main),
         "prefix_cache": ("BENCH_prefix_cache.json", prefix_cache.main),
         "adapter_swap": ("BENCH_adapter_swap.json", adapter_swap.main),
+        "slo_scheduling": ("BENCH_slo_scheduling.json", slo_scheduling.main),
     }
 
 

@@ -37,6 +37,18 @@ class Request:
     # ground-truth best adapter (workload synthesis; the router predicts it)
     true_adapter: Optional[int] = None
     prompt_tokens: Optional[object] = None  # jnp [prompt_len] int32
+    # scheduling class: lower admits first (0 = most urgent). Ties fall
+    # back to FIFO (requeued work still leads — see engine admission),
+    # so all-equal priorities reproduce the plain FIFO queue exactly.
+    priority: int = 0
+    # per-request SLOs (seconds), both optional. ttft_slo is a deadline
+    # on arrival→first-token: the engine's admission control sheds the
+    # request (429-style) when the projected TTFT exceeds it, and times
+    # it out when the deadline has already passed unserved. tpot_slo
+    # bounds the per-token decode latency (finish − first_token over
+    # generated − 1) and is used for attainment *reporting* only.
+    ttft_slo: Optional[float] = None
+    tpot_slo: Optional[float] = None
 
     # filled during serving
     selected_adapter: Optional[int] = None
@@ -55,6 +67,17 @@ class Request:
     # once per request instead of once per scheduler tick keeps the
     # stall-loop ticks cheap)
     sel_scores: Optional[object] = None
+    # sim time of the (latest) slot assignment; the admission-control
+    # TTFT estimator keys its admit→first-token EWMA off it
+    admit_time: Optional[float] = None
+    # admission-control outcome: None = served (or still queued at
+    # max_sim_time), 'shed' = projected TTFT exceeded ttft_slo at
+    # admission (the 429 path), 'timeout' = deadline already passed
+    # when the request reached the head of the queue. Rejected requests
+    # are recorded, never silently dropped: they stay in the trace the
+    # summary sees and count against SLO attainment.
+    rejected: Optional[str] = None
+    reject_time: Optional[float] = None
 
 
 @dataclass
@@ -82,6 +105,11 @@ class Slot:
     # tokens of the prompt served from shared cached pages (prefix-cache
     # hit; 0 = cold). Prefill runs only on the remaining suffix.
     prefix_len: int = 0
+    # chunked prefill progress: prompt positions [0, prefill_pos) are
+    # already in the KV cache (0 = none beyond any prefix-cache hit).
+    # The engine advances it one ≤ prefill_chunk-token chunk per
+    # scheduler iteration; a preemption resets it (restart-recompute).
+    prefill_pos: int = 0
     # async adapter swap-in: sim time the slot's adapter transfer lands
     # (the LOADING state waits on it; meaningless outside LOADING)
     ready_time: float = 0.0
@@ -96,6 +124,7 @@ class Slot:
         self.bucket = None
         self.padded_prompt = None
         self.prefix_len = 0
+        self.prefill_pos = 0
         self.ready_time = 0.0
 
     def release(self) -> Request:
@@ -108,6 +137,7 @@ class Slot:
         self.bucket = None
         self.padded_prompt = None
         self.prefix_len = 0
+        self.prefill_pos = 0
         self.ready_time = 0.0
         return req
 

@@ -98,6 +98,38 @@ def main(argv=None) -> int:
                     help="adapter swap-in bytes/s (host→HBM transfer "
                          "channel; lower values make cold adapters "
                          "costlier and the async/prefetch win larger)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: bound every prefill call to "
+                         "at most this many prompt tokens, interleaving "
+                         "remaining chunks with decode steps (bounds the "
+                         "per-iteration step time a long prompt can "
+                         "impose on decoding tenants; default off — off "
+                         "is bit-identical to the pre-chunking engine)")
+    ap.add_argument("--no-admission-control", dest="admission_control",
+                    action="store_false", default=True,
+                    help="disable SLO admission control (default on; it "
+                         "only ever affects requests carrying a TTFT "
+                         "deadline — see --interactive-frac): hopeless "
+                         "requests are no longer shed/timed out, they "
+                         "just miss their deadlines")
+    ap.add_argument("--interactive-frac", type=float, default=0.0,
+                    help="fraction of workload requests tagged "
+                         "interactive: priority 0 plus the TTFT/TPOT "
+                         "deadlines below; the rest become priority-1 "
+                         "batch traffic (0 = the pre-SLO workload)")
+    ap.add_argument("--interactive-ttft-slo", type=float, default=2.0,
+                    help="arrival→first-token deadline (s) for "
+                         "interactive requests")
+    ap.add_argument("--interactive-tpot-slo", type=float, default=None,
+                    help="per-decode-token deadline (s) for interactive "
+                         "requests (reporting only)")
+    ap.add_argument("--long-prompt-frac", type=float, default=0.0,
+                    help="fraction of requests whose unique tail is "
+                         "extended by a --long-input-range draw (the "
+                         "heavy-tailed prompt mix chunked prefill helps)")
+    ap.add_argument("--long-input-range", type=int, nargs=2,
+                    default=(128, 192), metavar=("LO", "HI"),
+                    help="extra tail tokens for long-prompt requests")
     ap.add_argument("--no-prefill-batching", dest="prefill_batching",
                     action="store_false",
                     help="one B=1 prefill per slot (pre-batching baseline)")
@@ -124,6 +156,11 @@ def main(argv=None) -> int:
         input_range=(8, 64), output_range=(8, 32),
         system_prompt_len=args.system_prompt_len,
         shared_prefix_frac=args.shared_prefix_frac,
+        interactive_frac=args.interactive_frac,
+        interactive_ttft_slo=args.interactive_ttft_slo,
+        interactive_tpot_slo=args.interactive_tpot_slo,
+        long_prompt_frac=args.long_prompt_frac,
+        long_input_range=tuple(args.long_input_range),
         vocab_size=cfg.vocab_size, seed=args.seed)
     trace = generate_trace(wl)
 
@@ -137,6 +174,8 @@ def main(argv=None) -> int:
         kv_backend=args.kv_backend, kv_block_size=args.kv_block_size,
         kv_arena_blocks=args.kv_arena_blocks,
         prefix_cache=args.prefix_cache,
+        prefill_chunk=args.prefill_chunk,
+        admission_control=args.admission_control,
         async_swap=args.async_swap, prefetch_depth=args.prefetch_depth,
         disk_bandwidth=args.disk_bandwidth,
         prefill_batching=args.prefill_batching,
@@ -160,7 +199,8 @@ def main(argv=None) -> int:
               f"slo={summary.slo_attainment:.1%} "
               f"hit_rate={summary.cache_hit_rate:.1%} "
               f"{summary.batching_row()} {summary.kv_row()} "
-              f"{summary.prefix_row()} {summary.swap_row()}")
+              f"{summary.prefix_row()} {summary.swap_row()} "
+              f"{summary.slo_row()}")
     return 0
 
 

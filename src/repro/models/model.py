@@ -202,6 +202,55 @@ class Model:
         last = h[jnp.arange(b), lengths - prefix_len - 1]
         return self.logits(params, last), cache
 
+    def prefill_suffix_dense(self, params: Dict, tokens: jax.Array,
+                             cache: Dict, global_cache: Dict,
+                             slot_idx: jax.Array, lengths: jax.Array,
+                             prefix_len: int,
+                             lora: Optional[Dict] = None,
+                             lora_mode: LoRAMode = LoRAMode(),
+                             opts: Optional[Dict] = None,
+                             ) -> Tuple[jax.Array, Dict]:
+        """Dense-backend sibling of ``prefill_suffix``: prefill tokens at
+        positions [prefix_len, prefix_len + S) of prompts whose first
+        ``prefix_len`` positions were already written into the engine's
+        per-slot rings by earlier chunks (chunked prefill,
+        ``EngineConfig.prefill_chunk``).
+
+        tokens: [B, S] chunk tokens; global_cache: the engine's dense
+        cache ([ng, n_slots, clen, ...] leaves); slot_idx: [B] the rows'
+        slot indices; lengths: [B] prompt lengths *clamped* to the chunk
+        end (the last-token gather lands in [0, S) for every row — rows
+        finishing inside this chunk read their real first-token logits,
+        continuing rows read a junk position the engine ignores);
+        ``prefix_len`` is static. Per layer, attention runs over prefix
+        KV gathered from the rings followed by this chunk's fresh KV —
+        chunking is gated to attention-only full-length unquantized
+        rings (``kvpool.prefix_unsupported_reason``), so ring index ==
+        position and the gather needs no validity mask: every position
+        < prefix_len was written by a previous chunk of the same row.
+        Returns (last-token logits [B, V], mini cache) — the engine
+        scatters ring indices [prefix_len, prefix_len + S) back into the
+        global rows.
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = self.embed(params, tokens)
+        positions = prefix_len + jnp.arange(s)
+
+        def walk(node):
+            if isinstance(node, dict) and "k" in node and "pos" in node:
+                return {key: leaf[:, slot_idx, :prefix_len]
+                        for key, leaf in node.items() if key != "pos"}
+            return {k: walk(v) for k, v in node.items()}
+
+        prefix_kv = walk(global_cache)
+        h, _, cache = transformer.forward_stack(
+            params, x, cfg, positions, lora, lora_mode, opts, cache=cache,
+            prefix_kv=prefix_kv,
+            prefix_positions=jnp.arange(prefix_len, dtype=jnp.int32))
+        last = h[jnp.arange(b), lengths - prefix_len - 1]
+        return self.logits(params, last), cache
+
     def decode_step(self, params: Dict, tokens: jax.Array, cache: Dict,
                     pos: jax.Array, lora: Optional[Dict] = None,
                     lora_mode: LoRAMode = LoRAMode(),

@@ -100,6 +100,8 @@ Scheduler policies:
 from __future__ import annotations
 
 import functools
+import heapq
+import math
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
@@ -197,6 +199,30 @@ class EngineConfig:
     dlora_window: int = 8
     dlora_merge_uniques: int = 2
     cache_policy: str = "lru"
+    # chunked prefill: bound every prefill call to at most this many
+    # prompt tokens, interleaving the remaining chunks with decode steps
+    # across scheduler iterations (the head-of-line fix: a burst of long
+    # prompts no longer monopolizes the step loop while GENERATE slots
+    # starve). A chunk is a suffix prefill over the previously written
+    # KV — the same machinery the shared-prefix cache uses — so it needs
+    # the same cache shape guarantees (attention-only, full-length,
+    # unquantized rings: kvpool.prefix_unsupported_reason gates at
+    # init). None (default) = off: prefill paths and token streams are
+    # exactly the pre-chunking engine, bit for bit. Note chunked
+    # *streams* are not guaranteed bit-identical to unchunked: attention
+    # over a different total key width may reassociate float sums (the
+    # prefix cache deliberately keeps key widths equal to avoid this;
+    # chunking trades that guarantee for bounded step times).
+    prefill_chunk: Optional[int] = None
+    # SLO admission control: when a queued request carries a ttft_slo
+    # and its deadline already passed, reject it as 'timeout' at the
+    # head of the queue; when the projected TTFT (wait so far + an EWMA
+    # of recent admit→first-token times at its bucket) exceeds the
+    # deadline, shed it (429-style). Rejections are recorded on the
+    # request (Request.rejected), never silently dropped. Requests
+    # without a ttft_slo are never rejected, so traces with no SLO
+    # knobs behave exactly as before regardless of this flag.
+    admission_control: bool = True
     slo_seconds: float = 6.0
     router_accuracy: float = 0.95
     time_scale: float = 1.0          # measured-seconds -> sim-seconds
@@ -292,6 +318,11 @@ class EdgeLoRAEngine:
         backend, interpret = self.lora_backend, self._sgmv_interpret
         self.prefix_enabled = False
         self.prefix_cache = None
+        chunk = self.ecfg.prefill_chunk
+        if chunk is not None and chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1 (or None to "
+                             f"disable), got {chunk}")
+        self.chunked = chunk is not None
 
         def prefill_fn(params, pool, tokens, cache1, slot_id, length):
             mode = LoRAMode("batched", slot_id, scale, backend, interpret)
@@ -342,6 +373,72 @@ class EdgeLoRAEngine:
                     "shared pages live in the block arena")
             self.cache = self.model.init_cache(self.ecfg.n_slots,
                                                self.ecfg.max_ctx)
+            if not self.chunked:
+                return
+            # chunked prefill shares the suffix-over-cached-prefix cache
+            # contract with the prefix cache (ring index == position, no
+            # quantized or recurrent state), so the same gate applies
+            reason = kvlib.prefix_unsupported_reason(self.cache,
+                                                     self.ecfg.max_ctx)
+            if reason is not None:
+                raise ValueError(
+                    f"prefill_chunk unsupported for {cfg.name}: {reason}")
+
+            def prefill_sfx_dense_fn(params, pool, tokens, cache1, gcache,
+                                     slot_idx, sids, length, *, prefix_len):
+                mode = LoRAMode("batched", sids, scale, backend, interpret)
+                logits, cache1 = model.prefill_suffix_dense(
+                    params, tokens, cache1, gcache, slot_idx, length,
+                    prefix_len, pool, mode)
+                return jnp.argmax(logits, -1).astype(jnp.int32), cache1
+
+            def prefill_sfx_dense_merged_fn(params, tokens, cache1, gcache,
+                                            slot_idx, length, *, prefix_len):
+                logits, cache1 = model.prefill_suffix_dense(
+                    params, tokens, cache1, gcache, slot_idx, length,
+                    prefix_len)
+                return jnp.argmax(logits, -1).astype(jnp.int32), cache1
+
+            def dense_scatter_suffix_fn(gcache, bcache, slot_idx, lengths,
+                                        *, prefix_len, suffix_len):
+                # land mini-ring positions [prefix_len, prefix_len+sfx)
+                # into the global per-slot rings (ring index == position
+                # — chunking is gated to full-length rings). K/V copy
+                # unconditionally; the pos leaf masks right-pad columns
+                # beyond each row's real prompt to -1, exactly like
+                # _invalidate_past does for the whole-bucket path.
+                # Duplicate slot_idx rows (power-of-two padding) write
+                # identical data — idempotent like every group scatter.
+                positions = prefix_len + jnp.arange(suffix_len,
+                                                    dtype=jnp.int32)
+                lb = jnp.asarray(lengths, jnp.int32)[:, None]
+                valid = jnp.where(positions[None, :] < lb,
+                                  positions[None, :], -1)     # [B, sfx]
+                sl = slice(prefix_len, prefix_len + suffix_len)
+
+                def walk(gnode, bnode):
+                    if isinstance(gnode, dict) and "k" in gnode \
+                            and "pos" in gnode:
+                        new = {}
+                        for key, gleaf in gnode.items():
+                            if key == "pos":
+                                new[key] = gleaf.at[:, slot_idx, sl].set(
+                                    valid.astype(gleaf.dtype))
+                            else:
+                                new[key] = gleaf.at[:, slot_idx, sl].set(
+                                    bnode[key][:, :, sl].astype(gleaf.dtype))
+                        return new
+                    return {k: walk(gnode[k], bnode[k]) for k in gnode}
+
+                return walk(gcache, bcache)
+
+            self._prefill_sfx_dense = jax.jit(
+                prefill_sfx_dense_fn, static_argnames=("prefix_len",))
+            self._prefill_sfx_dense_merged = jax.jit(
+                prefill_sfx_dense_merged_fn, static_argnames=("prefix_len",))
+            self._dense_scatter_suffix = jax.jit(
+                dense_scatter_suffix_fn,
+                static_argnames=("prefix_len", "suffix_len"))
             return
 
         # ---- paged KV: shared page arena + per-sequence block tables --
@@ -400,17 +497,23 @@ class EdgeLoRAEngine:
         self._paged_write = jax.jit(paged_write)
 
         # ---- shared-prefix radix cache over the arena -----------------
+        # (its suffix-prefill steps double as chunked prefill's backbone,
+        # so they are built whenever either feature is on)
         self.prefix_enabled = bool(ecfg.prefix_cache)
         self.prefix_cache = None
-        if not self.prefix_enabled:
+        if not (self.prefix_enabled or self.chunked):
             return
         reason = kvlib.prefix_unsupported_reason(template, ecfg.max_ctx)
         if reason is not None:
+            feature = ("prefix_cache" if self.prefix_enabled
+                       else "prefill_chunk")
             raise ValueError(
-                f"prefix_cache unsupported for {cfg.name}: {reason}")
-        # PrefixCache self-wires as the pool's reclaimer (its memoized
-        # reclaimable() depends on the pool's refcount-change hook)
-        self.prefix_cache = PrefixCache(self.kvpool, bs)
+                f"{feature} unsupported for {cfg.name}: {reason}")
+        if self.prefix_enabled:
+            # PrefixCache self-wires as the pool's reclaimer (its
+            # memoized reclaimable() depends on the pool's
+            # refcount-change hook)
+            self.prefix_cache = PrefixCache(self.kvpool, bs)
 
         def prefill_suffix_fn(params, pool, tokens, cache1, arena, tables,
                               slot_id, length, *, prefix_len):
@@ -517,8 +620,8 @@ class EdgeLoRAEngine:
                     f"explicitly or raise max_ctx")
         now = 0.0
         queue = sorted(trace, key=lambda r: r.arrival_time)
-        qi = 0
         completed: List[Request] = []
+        rejected: List[Request] = []
         # per-phase step invocation counts + prefill group-size histogram
         # (ServingSummary surfaces them; batching makes prefill_steps +
         # router_steps drop below the number of requests served)
@@ -526,11 +629,25 @@ class EdgeLoRAEngine:
         self.decode_steps = 0
         self.router_steps = 0
         self.prefill_batch_hist: Dict[int, int] = {}
-        # paged-KV scheduling state: requests bounced back by a dry arena
-        # (admission deferrals leave the queue untouched; decode-time
-        # preemptions land here and re-admit ahead of new arrivals)
-        self._requeue: List[Request] = []
+        # admission state: arrivals the clock has passed sit in a
+        # priority heap of (priority, class, seq, request) — class 0 for
+        # requeued (KV-preempted) work, class 1 for fresh arrivals, seq
+        # a monotone push counter so ties never compare Request objects.
+        # With all-equal priorities the heap pops requeue-first FIFO —
+        # exactly the old two-list order, so SLO-free traces admit (and
+        # stream) identically to the pre-priority engine.
+        self._queue = queue
+        self._qi = 0
+        self._ready: List[Tuple[int, int, int, Request]] = []
+        self._push_seq = 0
         self._admit_counter = 0
+        # SLO machinery: per-bucket EWMA of admit→first-token times (the
+        # admission controller's TTFT projection) + per-scheduler-
+        # iteration busy-time histogram (bounded-step-time evidence for
+        # chunked prefill)
+        self._ttft_ewma: Dict[int, float] = {}
+        self._step_hist: Dict[str, int] = {}
+        self.max_step_seconds = 0.0
         self.kv_deferrals = 0
         self.kv_preemptions = 0
         self.peak_active_slots = 0
@@ -554,8 +671,7 @@ class EdgeLoRAEngine:
             window — otherwise a drained queue could leave merged mode
             folded on an adapter the requeue can never match."""
             ahead = [r.true_adapter for r in
-                     (self._requeue + queue[qi:qi + ecfg.dlora_window])
-                     [:ecfg.dlora_window]]
+                     self._upcoming(ecfg.dlora_window)]
             if not ahead:
                 return dlora_mode, dlora_merged_adapter
             uniq = set(ahead)
@@ -566,13 +682,14 @@ class EdgeLoRAEngine:
             return "unmerged", None
 
         def arrivals_ready():
-            return bool(self._requeue) or (
-                qi < len(queue) and queue[qi].arrival_time <= now)
+            self._ingest(now)
+            return bool(self._ready)
 
-        while len(completed) < len(queue):
+        while len(completed) + len(rejected) < len(queue):
             if max_sim_time is not None and now > max_sim_time:
                 break
             progressed = False
+            busy0 = self.busy_time
 
             # ---- admission -------------------------------------------
             idle = self.slots.idle()
@@ -593,8 +710,11 @@ class EdgeLoRAEngine:
                         dlora_mode, dlora_merged_adapter = (want_mode,
                                                             want_adapter)
             while idle and arrivals_ready():
-                from_requeue = bool(self._requeue)
-                req = self._requeue[0] if from_requeue else queue[qi]
+                req = self._ready[0][3]
+                if ecfg.admission_control and req.ttft_slo is not None \
+                        and self._reject_expired(req, now, rejected):
+                    progressed = True
+                    continue  # next heap head (rejection IS progress)
                 if ecfg.policy == "dlora" and dlora_mode == "merged" \
                         and req.true_adapter != dlora_merged_adapter:
                     break  # merged mode serves only the folded adapter
@@ -621,8 +741,10 @@ class EdgeLoRAEngine:
                         # unmerge old + merge new
                         now += 4 * self.adapter_bytes / ecfg.mem_bandwidth
                         active_adapter = want
+                heapq.heappop(self._ready)
                 slot = idle.pop()
                 slot.assign(req)
+                req.admit_time = now
                 slot.admit_seq = self._admit_counter
                 self._admit_counter += 1
                 if self.paged:
@@ -641,10 +763,6 @@ class EdgeLoRAEngine:
                         # in shared pages at SELECTING→PREFILL
                         self.kvpool.append_tokens(req.request_id,
                                                   req.prompt_len)
-                if from_requeue:
-                    self._requeue.pop(0)
-                else:
-                    qi += 1
                 progressed = True
             self.peak_active_slots = max(
                 self.peak_active_slots,
@@ -771,7 +889,7 @@ class EdgeLoRAEngine:
                 # demand while the channel would otherwise sit idle
                 # (behind any demand loads booked this tick)
                 if ecfg.prefetch_depth > 0 and ecfg.policy != "llamacpp":
-                    self._run_prefetch(now, queue, qi, dlora_mode)
+                    self._run_prefetch(now, dlora_mode)
 
             # ---- prefill (gather→batch→scatter) ----------------------
             prefilling = self.slots.in_state(SlotState.PREFILL)
@@ -782,11 +900,20 @@ class EdgeLoRAEngine:
                 # jit shape); one jit'd [B, bucket − prefix] prefill per
                 # group — heterogeneous adapters batch fine, the
                 # SGMV/einsum delta is per-row
+                chunk = ecfg.prefill_chunk
                 groups: Dict[Tuple[int, bool, int], List[Slot]] = {}
                 for slot in prefilling:
                     self._slot_prompt(slot)
+                    # chunked: progress starts at the prefix-cache hit
+                    # length (those positions are already served from
+                    # shared pages) and groups key off it — same-progress
+                    # rows share one jit shape, like same-prefix rows do
+                    if slot.prefill_pos < slot.prefix_len:
+                        slot.prefill_pos = slot.prefix_len
+                    start = (slot.prefill_pos if self.chunked
+                             else slot.prefix_len)
                     groups.setdefault(
-                        (slot.bucket, slot.merged, slot.prefix_len),
+                        (slot.bucket, slot.merged, start),
                         []).append(slot)
                 work: List[Tuple[int, bool, int, List[Slot]]] = []
                 for (b, merged, pfx), group in groups.items():
@@ -794,8 +921,21 @@ class EdgeLoRAEngine:
                         work.append((b, merged, pfx, group))
                     else:  # pre-batching baseline: one B=1 call per slot
                         work.extend((b, merged, pfx, [s]) for s in group)
-                for b, merged, pfx, group in work:
-                    now += self._prefill_group(b, merged, pfx, group, now)
+                for b, merged, start, group in work:
+                    span = b - start
+                    # whole-span groups take the existing un-chunked
+                    # paths (prefill_chunk=None stays bit-identical; a
+                    # terminal paged chunk reuses the prefix-suffix
+                    # machinery wholesale). Dense mid-prompt progress
+                    # (start > 0) always routes through _prefill_chunk —
+                    # _prefill_group's suffix branch is paged-only.
+                    if not self.chunked or (chunk >= span
+                                            and (start == 0 or self.paged)):
+                        now += self._prefill_group(b, merged, start,
+                                                   group, now)
+                    else:
+                        now += self._prefill_chunk(
+                            b, merged, start, min(chunk, span), group, now)
                 progressed = True
 
             # ---- batched decode (Batch LoRA Inference) ----------------
@@ -862,13 +1002,18 @@ class EdgeLoRAEngine:
                         completed.append(slot.release())
                 progressed = True
 
+            # ---- per-iteration step time (compute charged this tick) --
+            step_busy = self.busy_time - busy0
+            if step_busy > 0.0:
+                self._note_step(step_busy)
+
             # ---- idle / load-blocked: jump to the earliest event ------
             if not progressed:
                 loading = self.slots.in_state(SlotState.LOADING)
                 if loading:
                     wake = min(s.ready_time for s in loading)
-                    if not self._requeue and qi < len(queue):
-                        arr = max(now, queue[qi].arrival_time)
+                    if not self._ready and self._qi < len(queue):
+                        arr = max(now, queue[self._qi].arrival_time)
                         if now < arr < wake:
                             now = arr  # an arrival may unblock admission
                             continue
@@ -877,11 +1022,11 @@ class EdgeLoRAEngine:
                     # async swap-in exists to minimize
                     self.load_stall_seconds += max(0.0, wake - now)
                     now = max(now, wake)
-                elif self._requeue:
-                    continue  # unreachable in practice: requeued work
+                elif self._ready:
+                    continue  # unreachable in practice: ready work
                     # re-admits (or an active slot progresses) next tick
-                elif qi < len(queue):
-                    now = max(now, queue[qi].arrival_time)
+                elif self._qi < len(queue):
+                    now = max(now, queue[self._qi].arrival_time)
                 else:
                     break
 
@@ -923,7 +1068,85 @@ class EdgeLoRAEngine:
                              "kv_stats": kv_stats,
                              "prefix_stats": prefix_stats,
                              "swap_stats": swap_stats,
+                             "step_time_hist":
+                                 dict(self._step_hist) or None,
+                             "max_step_seconds":
+                                 (self.max_step_seconds
+                                  if self._step_hist else None),
                          })
+
+    # ------------------------------------------------------------------
+    # priority admission, SLO shedding, step-time accounting
+    # ------------------------------------------------------------------
+
+    def _push_ready(self, req: Request, requeued: bool = False) -> None:
+        """Enqueue an admissible request. Requeued (KV-preempted) work
+        gets class 0 so it re-admits ahead of same-priority arrivals —
+        the old two-list discipline, now one heap."""
+        heapq.heappush(self._ready, (req.priority, 0 if requeued else 1,
+                                     self._push_seq, req))
+        self._push_seq += 1
+
+    def _ingest(self, now: float) -> None:
+        """Move every arrival the clock has passed into the ready heap
+        (the arrival-sorted trace makes this a pointer walk)."""
+        q = self._queue
+        while self._qi < len(q) and q[self._qi].arrival_time <= now:
+            self._push_ready(q[self._qi])
+            self._qi += 1
+
+    def _upcoming(self, n: int) -> List[Request]:
+        """The next ``n`` requests admission will see, in order: heap
+        order over the ready set, then future arrivals — the lookahead
+        window dlora's merge heuristic and the prefetcher scan."""
+        head = [e[3] for e in heapq.nsmallest(n, self._ready)]
+        return (head + self._queue[self._qi:self._qi + n])[:n]
+
+    def _reject_expired(self, req: Request, now: float,
+                        rejected: List[Request]) -> bool:
+        """Admission control at the heap head (the request is about to
+        take a slot). 'timeout': its TTFT deadline already passed while
+        it queued. 'shed': the projected TTFT — wait so far plus the
+        per-bucket EWMA of recent admit→first-token times — exceeds the
+        deadline, so serving it would waste a slot on a guaranteed miss
+        (429-style early rejection). No estimate yet (cold bucket) →
+        never shed: the controller only acts on evidence. Returns True
+        if the request was popped and recorded."""
+        wait = now - req.arrival_time
+        if wait >= req.ttft_slo:
+            why = "timeout"
+        else:
+            est = self._ttft_ewma.get(self._bucket(req.prompt_len))
+            if est is None or wait + est <= req.ttft_slo:
+                return False
+            why = "shed"
+        heapq.heappop(self._ready)
+        req.rejected = why
+        req.reject_time = now
+        rejected.append(req)
+        return True
+
+    def _note_ttft(self, bucket: int, req: Request, t_first: float) -> None:
+        """Feed the admission controller's per-bucket admit→first-token
+        EWMA (0.5/0.5, like the step-timing EWMA)."""
+        if req.admit_time is None:
+            return
+        obs = max(0.0, t_first - req.admit_time)
+        prev = self._ttft_ewma.get(bucket)
+        self._ttft_ewma[bucket] = (obs if prev is None
+                                   else 0.5 * prev + 0.5 * obs)
+
+    def _note_step(self, dt: float) -> None:
+        """Bin one scheduler iteration's charged compute seconds into
+        the power-of-two-millisecond step histogram."""
+        self.max_step_seconds = max(self.max_step_seconds, dt)
+        ms = dt * 1e3
+        if ms <= 0.125:
+            key = "le_0.125ms"
+        else:
+            exp = min(14, math.ceil(math.log2(ms)))  # cap: "le_16384ms"
+            key = f"le_{2.0 ** exp:g}ms"
+        self._step_hist[key] = self._step_hist.get(key, 0) + 1
 
     def _prefill_group(self, bucket: int, merged: bool, prefix_len: int,
                        group: List[Slot], now: float) -> float:
@@ -1011,6 +1234,7 @@ class EdgeLoRAEngine:
             req.generated = 1
             req.tokens = [slot.last_token]
             slot.state = SlotState.GENERATE
+            self._note_ttft(slot.bucket, req, now + dt)
         if self.prefix_enabled:
             # index every full prompt block (cold rows donate fresh
             # pages; warm rows walk their matched path — a no-op except
@@ -1019,6 +1243,135 @@ class EdgeLoRAEngine:
                 self.prefix_cache.insert(
                     self._exec_key(slot), slot.request.prompt_tokens,
                     self.kvpool.tables[slot.request.request_id])
+        return dt
+
+    def _prefill_chunk(self, bucket: int, merged: bool, start: int,
+                       width: int, group: List[Slot], now: float) -> float:
+        """One bounded slice of chunked prefill: run prompt positions
+        [start, start + width) for every slot in ``group`` (same bucket,
+        same merged-ness, same progress) as a suffix prefill over the KV
+        earlier chunks wrote, scatter the fresh slice, and either advance
+        ``prefill_pos`` (more chunks pending — the slot stays PREFILL and
+        decode steps interleave before the next chunk) or emit the first
+        token and enter GENERATE (terminal chunk). start == 0 reuses the
+        plain prefill step at chunk width; later chunks reuse the
+        prefix-suffix machinery (paged) or its dense sibling. Timing keys
+        are shape-keyed exactly like the un-chunked paths, so a chunk
+        costs what a same-shape prefill costs. Returns the wall-time
+        charged for the group."""
+        rows = self._pad_group(group)
+        end = start + width
+        real = np.fromiter((s.request.prompt_len for s in rows), np.int32,
+                           count=len(rows))
+        # tokens past the chunk don't exist yet: clamp the lengths the
+        # step sees so every row's last-token gather lands inside the
+        # chunk (rows finishing here read their real first-token logits;
+        # continuing rows read a junk position nobody uses). Scatters
+        # get the REAL lengths — right-pad columns must stay invalid.
+        lengths = jnp.asarray(np.minimum(real, end))
+        cacheb = self._fresh_cache(len(rows))
+        toks = jnp.stack([s.padded_prompt[start:end] for s in rows])
+        sids = None
+        if not merged:
+            sids = jnp.asarray(
+                np.fromiter((s.adapter_slot for s in rows), np.int32,
+                            count=len(rows)))
+        if self.paged:
+            mb = self._kv_meta.max_blocks
+            tables = jnp.asarray(np.stack(
+                [self.kvpool.block_table(s.request.request_id, mb)
+                 for s in rows]))
+            if start == 0:
+                if merged:
+                    (first, cacheb), dt = self._timed(
+                        ("prefill_merged", width, len(rows)),
+                        self._prefill_merged, self.params, toks, cacheb,
+                        lengths)
+                else:
+                    (first, cacheb), dt = self._timed(
+                        ("prefill", width, len(rows)), self._prefill,
+                        self.params, self.lora_pool, toks, cacheb, sids,
+                        lengths)
+            elif merged:
+                fn = functools.partial(self._prefill_suffix_merged,
+                                       prefix_len=start)
+                (first, cacheb), dt = self._timed(
+                    ("prefill_sfx_merged", end, start, len(rows)),
+                    fn, self.params, toks, cacheb, self.cache, tables,
+                    lengths)
+            else:
+                fn = functools.partial(self._prefill_suffix,
+                                       prefix_len=start)
+                (first, cacheb), dt = self._timed(
+                    ("prefill_sfx", end, start, len(rows)),
+                    fn, self.params, self.lora_pool, toks, cacheb,
+                    self.cache, tables, sids, lengths)
+            # scatter_suffix handles start == 0 too (mini ring index ==
+            # position); pad columns past each row's real length land in
+            # the trash page
+            self.cache = self._scatter_suffix(
+                self.cache, cacheb, tables, jnp.asarray(real),
+                prefix_len=start, suffix_len=width)
+        else:
+            slot_idx = jnp.asarray(
+                np.fromiter((s.index for s in rows), np.int32,
+                            count=len(rows)))
+            if start == 0:
+                if merged:
+                    (first, cacheb), dt = self._timed(
+                        ("prefill_merged", width, len(rows)),
+                        self._prefill_merged, self.params, toks, cacheb,
+                        lengths)
+                else:
+                    (first, cacheb), dt = self._timed(
+                        ("prefill", width, len(rows)), self._prefill,
+                        self.params, self.lora_pool, toks, cacheb, sids,
+                        lengths)
+                # fresh slots: the whole-ring copy is correct (positions
+                # past the chunk are still at their invalid init state)
+                self.cache = self._write_slots(self.cache, cacheb,
+                                               slot_idx)
+            else:
+                if merged:
+                    fn = functools.partial(self._prefill_sfx_dense_merged,
+                                           prefix_len=start)
+                    (first, cacheb), dt = self._timed(
+                        ("prefill_sfx_dense_merged", end, start,
+                         len(rows)),
+                        fn, self.params, toks, cacheb, self.cache,
+                        slot_idx, lengths)
+                else:
+                    fn = functools.partial(self._prefill_sfx_dense,
+                                           prefix_len=start)
+                    (first, cacheb), dt = self._timed(
+                        ("prefill_sfx_dense", end, start, len(rows)),
+                        fn, self.params, self.lora_pool, toks, cacheb,
+                        self.cache, slot_idx, sids, lengths)
+                self.cache = self._dense_scatter_suffix(
+                    self.cache, cacheb, slot_idx, jnp.asarray(real),
+                    prefix_len=start, suffix_len=width)
+        self.prefill_steps += 1
+        self.prefill_batch_hist[len(group)] = \
+            self.prefill_batch_hist.get(len(group), 0) + 1
+        first_np = np.asarray(first)
+        for i, slot in enumerate(group):
+            req = slot.request
+            if req.prompt_len <= end:
+                # terminal chunk: same completion protocol as
+                # _prefill_group
+                slot.pos = req.prompt_len
+                slot.last_token = int(first_np[i])
+                req.first_token_time = now + dt
+                req.generated = 1
+                req.tokens = [slot.last_token]
+                slot.state = SlotState.GENERATE
+                self._note_ttft(slot.bucket, req, now + dt)
+                if self.prefix_enabled:
+                    self.prefix_cache.insert(
+                        self._exec_key(slot), req.prompt_tokens,
+                        self.kvpool.tables[req.request_id])
+            else:
+                slot.prefill_pos = end
         return dt
 
     # ------------------------------------------------------------------
@@ -1174,24 +1527,24 @@ class EdgeLoRAEngine:
             return None if cached else aid
         return req.prefetch_hint
 
-    def _run_prefetch(self, now: float, queue: List[Request], qi: int,
-                      dlora_mode: str) -> None:
+    def _run_prefetch(self, now: float, dlora_mode: str) -> None:
         """Queue-ahead prefetch: start swap-ins for upcoming demand so
-        the transfer channel overlaps with compute. Targets, nearest
-        first: KV-preempted requeue, then arrived-but-unadmitted queue
-        entries — each with a known adapter or a cheap AAS prediction
-        (``_predicted_adapter``). Bounded by ``prefetch_depth``; the
-        whole lookahead window is passed as the manager's protect set,
-        so a colder prefetch can never evict a hotter (sooner-needed)
-        adapter — and pins protect the rest. (Pool-deferred SELECTING
-        slots are *not* targets: deferral means every block is pinned,
-        and the moment one frees, the slot's own demand acquire — which
-        runs before the prefetcher every tick — takes it.)"""
+        the transfer channel overlaps with compute. Targets are the
+        ready heap in admission order — KV-preempted requeue leads, then
+        arrived-but-unadmitted work by priority — each with a known
+        adapter or a cheap AAS prediction (``_predicted_adapter``).
+        Bounded by ``prefetch_depth``; the whole lookahead window is
+        passed as the manager's protect set, so a colder prefetch can
+        never evict a hotter (sooner-needed) adapter — and pins protect
+        the rest. (Pool-deferred SELECTING slots are *not* targets:
+        deferral means every block is pinned, and the moment one frees,
+        the slot's own demand acquire — which runs before the prefetcher
+        every tick — takes it.)"""
         ecfg = self.ecfg
+        self._ingest(now)
         targets: List[int] = []
-        waiting = self._requeue + [
-            r for r in queue[qi:qi + 4 * ecfg.prefetch_depth]
-            if r.arrival_time <= now]
+        waiting = [e[3] for e in heapq.nsmallest(
+            4 * ecfg.prefetch_depth, self._ready)]
         for r in waiting:
             aid = self._predicted_adapter(r, dlora_mode)
             if aid is not None:
@@ -1283,6 +1636,9 @@ class EdgeLoRAEngine:
         req.first_token_time = None
         req.generated = 0
         req.tokens = []
+        # restart semantics reset the admission clock too: the TTFT
+        # estimator must not learn from a partially-served admission
+        req.admit_time = None
         slot.release()
-        self._requeue.append(req)
+        self._push_ready(req, requeued=True)
         self.kv_preemptions += 1

@@ -1,0 +1,31 @@
+"""The docs link checker: repo docs must resolve, and the checker must
+actually catch breakage (a checker that always passes guards nothing).
+"""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_md_links  # noqa: E402
+
+
+def test_repo_docs_have_no_broken_links():
+    assert check_md_links.main([]) == 0
+
+
+def test_checker_flags_broken_link_and_anchor(tmp_path):
+    md = tmp_path / "t.md"
+    md.write_text("[ok](#real)\n\n# Real\n\n"
+                  "[bad](missing.md)\n[badfrag](#nope)\n")
+    errors = check_md_links.check_file(md, tmp_path)
+    assert len(errors) == 2
+    assert any("broken link: missing.md" in e for e in errors)
+    assert any("missing anchor: #nope" in e for e in errors)
+
+
+def test_code_fences_and_spans_are_ignored(tmp_path):
+    md = tmp_path / "t.md"
+    md.write_text("```\n[not a link](nope.md)\n```\n"
+                  "`[also not](gone.md)`\n")
+    assert check_md_links.check_file(md, tmp_path) == []

@@ -1,0 +1,106 @@
+"""Percentile / SLO-accounting edge cases in ``serving/metrics.py``.
+
+These are pure-function tests over hand-built Request lists: one-sample
+percentiles, tied samples, rejected requests (excluded from latency
+arrays, included in attainment denominators), and the generated≤1
+TPOT-eligibility rule.
+"""
+import math
+
+from repro.core.slots import Request
+from repro.serving.metrics import summarize
+
+
+def _req(rid, arrival=0.0, first=None, finish=None, generated=0,
+         plen=8, olen=4, priority=0, ttft_slo=None, tpot_slo=None,
+         rejected=None):
+    r = Request(request_id=rid, arrival_time=arrival, prompt_len=plen,
+                output_len=olen, priority=priority, ttft_slo=ttft_slo,
+                tpot_slo=tpot_slo)
+    r.first_token_time = first
+    r.finish_time = finish
+    r.generated = generated
+    r.rejected = rejected
+    return r
+
+
+def test_single_request_percentiles_collapse():
+    reqs = [_req(0, arrival=1.0, first=2.0, finish=5.0, generated=4)]
+    s = summarize(reqs, duration=10.0)
+    assert s.ttft_p50 == s.ttft_p95 == s.ttft_p99 == 1.0
+    assert s.latency_p50 == s.latency_p99 == 4.0
+    assert s.tpot_p50 == s.tpot_p99 == 1.0  # (5-2)/(4-1)
+
+
+def test_tied_samples():
+    reqs = [_req(i, arrival=0.0, first=1.0, finish=3.0, generated=3)
+            for i in range(4)]
+    s = summarize(reqs, duration=10.0)
+    assert s.ttft_p50 == s.ttft_p99 == 1.0
+    assert s.tpot_p50 == s.tpot_p99 == 1.0
+
+
+def test_no_completions_yields_nan_not_crash():
+    s = summarize([_req(0)], duration=1.0)
+    assert s.n_completed == 0
+    assert math.isnan(s.ttft_p99) and math.isnan(s.tpot_p99)
+    assert s.throughput == 0.0
+
+
+def test_generated_one_contributes_no_tpot():
+    """A request that emitted only its first token has no decode
+    interval: it must not produce a TPOT sample (division by zero) and
+    is ineligible for tpot attainment."""
+    reqs = [_req(0, first=1.0, finish=1.0, generated=1, olen=1,
+                 tpot_slo=0.5)]
+    s = summarize(reqs, duration=2.0)
+    assert math.isnan(s.tpot_p50)
+    st = s.slo_stats["by_priority"][0]
+    assert st["tpot_eligible"] == 0
+
+
+def test_rejected_excluded_from_latency_included_in_attainment():
+    reqs = [
+        _req(0, arrival=0.0, first=1.0, finish=2.0, generated=2,
+             ttft_slo=2.0),                                   # attained
+        _req(1, arrival=0.0, ttft_slo=0.5, rejected="shed"),  # miss
+        _req(2, arrival=0.0, ttft_slo=0.5, rejected="timeout"),  # miss
+    ]
+    s = summarize(reqs, duration=5.0)
+    assert s.n_completed == 1
+    assert s.shed_requests == 1 and s.timeout_requests == 1
+    # latency arrays hold only the served request
+    assert s.ttft_p50 == s.ttft_p99 == 1.0
+    st = s.slo_stats["by_priority"][0]
+    assert st["n"] == 3
+    assert st["ttft_eligible"] == 3      # shed must not launder the SLO
+    assert st["ttft_attained"] == 1
+    assert st["ttft_attainment"] == 1 / 3
+
+
+def test_per_priority_split():
+    reqs = [
+        _req(0, priority=0, first=0.5, finish=1.0, generated=2,
+             ttft_slo=1.0),
+        _req(1, priority=1, first=4.0, finish=5.0, generated=2,
+             ttft_slo=1.0),
+        _req(2, priority=1, first=0.2, finish=0.4, generated=2),
+    ]
+    s = summarize(reqs, duration=6.0)
+    by = s.slo_stats["by_priority"]
+    assert by[0]["ttft_attained"] == 1 and by[0]["ttft_eligible"] == 1
+    assert by[1]["ttft_attained"] == 0 and by[1]["ttft_eligible"] == 1
+    assert by[1]["n"] == 2 and by[1]["completed"] == 2
+
+
+def test_tpot_attainment():
+    reqs = [
+        _req(0, first=1.0, finish=2.0, generated=5, olen=5,
+             tpot_slo=0.5),   # tpot 0.25 -> attained
+        _req(1, first=1.0, finish=9.0, generated=5, olen=5,
+             tpot_slo=0.5),   # tpot 2.0 -> miss
+    ]
+    s = summarize(reqs, duration=10.0)
+    st = s.slo_stats["by_priority"][0]
+    assert st["tpot_eligible"] == 2 and st["tpot_attained"] == 1
+    assert st["tpot_attainment"] == 0.5

@@ -1,0 +1,312 @@
+"""SLO-driven scheduling: chunked prefill, priorities, admission control.
+
+Contracts under test:
+
+* ``prefill_chunk=None`` (and any chunk covering the whole bucket) is
+  the pre-chunking engine bit for bit — same streams, same prefill step
+  counts — across every scheduler policy and both KV backends.
+* A finite chunk splits prefill into bounded slices interleaved with
+  decode: more prefill steps, every request still completes, and the
+  per-iteration step histogram is populated.
+* Priorities admit lower-numbered classes first; admission control
+  rejects requests whose TTFT deadline is hopeless ('timeout' when it
+  already passed, 'shed' when the projected TTFT exceeds it) and
+  records them instead of dropping them.
+* SLO-free traces are untouched by the admission controller regardless
+  of the ``admission_control`` flag.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.slots import Request
+from repro.serving.engine import EdgeLoRAEngine, EngineConfig
+from repro.serving.workload import WorkloadConfig, generate_trace
+
+
+def _cfg(n_adapters=4, max_resident=8):
+    cfg = reduced_config(get_config("qwen2-0.5b"))
+    return dataclasses.replace(
+        cfg, lora=dataclasses.replace(cfg.lora, n_adapters=n_adapters,
+                                      max_resident=max_resident))
+
+
+def _ecfg(**kw):
+    base = dict(n_slots=4, max_ctx=48, prompt_buckets=(16, 32),
+                policy="edgelora_no_aas", memory_budget=1e12)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _trace(cfg, seed=0, rate=3.0, duration=4.0, tail=(8, 40), olen=(4, 8)):
+    wl = WorkloadConfig(n_adapters=4, request_rate=rate, duration=duration,
+                        input_range=tail, output_range=olen,
+                        vocab_size=cfg.vocab_size, seed=seed)
+    return generate_trace(wl)
+
+
+def _tokens(trace):
+    return {r.request_id: tuple(r.tokens) for r in trace}
+
+
+def _serve(cfg, trace, **ecfg_kw):
+    eng = EdgeLoRAEngine(cfg, _ecfg(**ecfg_kw))
+    summary = eng.serve(trace)
+    return eng, summary, _tokens(trace)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: off == whole-bucket chunk, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["edgelora", "edgelora_no_aas",
+                                    "llamacpp", "dlora"])
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_whole_bucket_chunk_is_identity(policy, backend):
+    """A chunk covering max_ctx delegates every group to the un-chunked
+    path: streams AND step counts must match prefill_chunk=None exactly
+    (this is the regression net for the prefill_chunk=None acceptance
+    bar — the dispatch layer provably collapses to the old code)."""
+    cfg = _cfg()
+    t_off = _trace(cfg, seed=1)
+    t_on = _trace(cfg, seed=1)
+    _, s_off, off = _serve(cfg, t_off, policy=policy, kv_backend=backend)
+    _, s_on, on = _serve(cfg, t_on, policy=policy, kv_backend=backend,
+                         prefill_chunk=48)
+    assert s_off.n_completed == s_on.n_completed == len(t_off)
+    assert off == on
+    assert s_off.prefill_steps == s_on.prefill_steps
+    assert s_off.prefill_batch_hist == s_on.prefill_batch_hist
+
+
+@pytest.mark.parametrize("policy", ["edgelora", "edgelora_no_aas",
+                                    "llamacpp", "dlora"])
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_small_chunk_completes_with_more_steps(policy, backend):
+    cfg = _cfg()
+    t_off = _trace(cfg, seed=2)
+    t_on = _trace(cfg, seed=2)
+    _, s_off, _ = _serve(cfg, t_off, policy=policy, kv_backend=backend)
+    _, s_on, _ = _serve(cfg, t_on, policy=policy, kv_backend=backend,
+                        prefill_chunk=16)
+    assert s_on.n_completed == len(t_on)
+    # every prompt > 16 tokens now needs ≥ 2 prefill slices
+    n_long = sum(1 for r in t_on if r.prompt_len > 16)
+    assert n_long > 0
+    assert s_on.prefill_steps > s_off.prefill_steps
+    # each completed request still generated its full output
+    for r in t_on:
+        assert r.generated == len(r.tokens) > 0
+    assert s_on.step_time_hist and sum(s_on.step_time_hist.values()) > 0
+    assert s_on.max_step_seconds > 0
+
+
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_small_chunk_sgmv_backend(backend):
+    cfg = _cfg()
+    trace = _trace(cfg, seed=3, duration=2.0)
+    _, s, _ = _serve(cfg, trace, kv_backend=backend, prefill_chunk=16,
+                     lora_backend="sgmv")
+    assert s.n_completed == len(trace)
+
+
+def test_chunk_with_prefix_cache():
+    """Chunking composes with the shared-prefix cache: progress starts
+    at the prefix-hit length, so warm requests chunk only their
+    suffix."""
+    cfg = _cfg()
+    wl = WorkloadConfig(n_adapters=2, request_rate=4.0, duration=3.0,
+                        input_range=(4, 12), output_range=(4, 6),
+                        system_prompt_len=16,
+                        vocab_size=cfg.vocab_size, seed=4)
+    trace = generate_trace(wl)
+    eng = EdgeLoRAEngine(cfg, _ecfg(kv_backend="paged", kv_block_size=8,
+                                    prefix_cache=True, prefill_chunk=8))
+    s = eng.serve(trace)
+    assert s.n_completed == len(trace)
+    assert s.prefix_stats["saved_prefill_tokens"] > 0
+
+
+def test_chunk_validation_and_unsupported_gate():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EdgeLoRAEngine(_cfg(), _ecfg(prefill_chunk=0))
+    ssm = reduced_config(get_config("mamba2-130m"))
+    ssm = dataclasses.replace(
+        ssm, lora=dataclasses.replace(ssm.lora, n_adapters=2,
+                                      max_resident=2))
+    for backend in ("dense", "paged"):
+        with pytest.raises(ValueError, match="prefill_chunk unsupported"):
+            EdgeLoRAEngine(ssm, _ecfg(n_slots=2, prompt_buckets=(16,),
+                                      kv_backend=backend,
+                                      prefill_chunk=16))
+
+
+# ---------------------------------------------------------------------------
+# priorities + admission control
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, arrival, plen, olen=4, adapter=0, priority=0, ttft_slo=None,
+         vocab=256, seed=0):
+    rng = np.random.default_rng([seed, rid])
+    return Request(request_id=rid, arrival_time=arrival, prompt_len=plen,
+                   output_len=olen, true_adapter=adapter,
+                   prompt_tokens=rng.integers(0, vocab, plen,
+                                              dtype=np.int32),
+                   priority=priority, ttft_slo=ttft_slo)
+
+
+def test_priority_admits_first():
+    """One slot, both requests ready at t=0: the priority-0 request
+    admits ahead of the earlier-queued priority-1 request."""
+    cfg = _cfg()
+    trace = [_req(0, 0.0, 12, olen=6, priority=1),
+             _req(1, 0.0, 12, olen=6, priority=0)]
+    eng = EdgeLoRAEngine(cfg, _ecfg(n_slots=1))
+    s = eng.serve(trace)
+    assert s.n_completed == 2
+    assert trace[1].first_token_time < trace[0].first_token_time
+
+
+def test_equal_priorities_keep_fifo_order():
+    cfg = _cfg()
+    trace = [_req(i, 0.0, 12, olen=4) for i in range(3)]
+    eng = EdgeLoRAEngine(cfg, _ecfg(n_slots=1))
+    s = eng.serve(trace)
+    assert s.n_completed == 3
+    fts = [r.first_token_time for r in trace]
+    assert fts == sorted(fts)
+
+
+def test_timeout_rejection():
+    """A deadline that passes while the request queues behind a busy
+    slot rejects as 'timeout' when the request reaches the head."""
+    cfg = _cfg()
+    trace = [_req(0, 0.0, 12, olen=16),
+             _req(1, 0.0, 12, olen=4, ttft_slo=1e-9)]
+    eng = EdgeLoRAEngine(cfg, _ecfg(n_slots=1))
+    s = eng.serve(trace)
+    assert trace[1].rejected == "timeout"
+    assert trace[1].reject_time is not None
+    assert trace[1].finish_time is None and trace[1].tokens == []
+    assert s.timeout_requests == 1 and s.shed_requests == 0
+    assert s.n_completed == 1
+    st = s.slo_stats["by_priority"][0]
+    assert st["ttft_eligible"] == 1 and st["ttft_attained"] == 0
+
+
+def test_shed_rejection():
+    """Once the per-bucket TTFT estimator has evidence, a request whose
+    projected TTFT exceeds its deadline is shed at admission — before
+    wasting a slot on a guaranteed miss."""
+    cfg = _cfg()
+    # request 0 seeds the bucket-16 admit→first-token EWMA; request 1
+    # arrives long after it finished (wait == 0 at pop, below the
+    # deadline) but any real prefill estimate exceeds 1 ns
+    trace = [_req(0, 0.0, 12, olen=4),
+             _req(1, 1e9, 12, olen=4, ttft_slo=1e-9)]
+    eng = EdgeLoRAEngine(cfg, _ecfg(n_slots=1))
+    s = eng.serve(trace)
+    assert trace[1].rejected == "shed"
+    assert s.shed_requests == 1 and s.timeout_requests == 0
+    assert s.n_completed == 1
+
+
+def test_admission_control_off_serves_everything():
+    cfg = _cfg()
+    trace = [_req(0, 0.0, 12, olen=16),
+             _req(1, 0.0, 12, olen=4, ttft_slo=1e-9)]
+    eng = EdgeLoRAEngine(cfg, _ecfg(n_slots=1, admission_control=False))
+    s = eng.serve(trace)
+    assert s.n_completed == 2
+    assert trace[1].rejected is None
+    # served late: the deadline was still missed — attainment says so
+    st = s.slo_stats["by_priority"][0]
+    assert st["ttft_eligible"] == 1 and st["ttft_attained"] == 0
+
+
+def test_slo_free_trace_identical_with_and_without_admission_control():
+    cfg = _cfg()
+    t_a = _trace(cfg, seed=5)
+    t_b = _trace(cfg, seed=5)
+    _, s_a, tok_a = _serve(cfg, t_a, admission_control=True)
+    _, s_b, tok_b = _serve(cfg, t_b, admission_control=False)
+    assert tok_a == tok_b
+    assert s_a.n_completed == s_b.n_completed == len(t_a)
+    assert s_a.shed_requests == s_b.shed_requests == 0
+
+
+def test_rejected_requests_excluded_from_latency_percentiles():
+    cfg = _cfg()
+    trace = [_req(0, 0.0, 12, olen=16),
+             _req(1, 0.0, 12, olen=4, ttft_slo=1e-9)]
+    eng = EdgeLoRAEngine(cfg, _ecfg(n_slots=1))
+    s = eng.serve(trace)
+    # one rejection: every percentile is over the single served request
+    assert s.ttft_p50 == s.ttft_p99 == pytest.approx(
+        trace[0].first_token_time - trace[0].arrival_time)
+    assert s.latency_p50 == pytest.approx(
+        trace[0].finish_time - trace[0].arrival_time)
+
+
+def test_slo_row_digest():
+    cfg = _cfg()
+    trace = [_req(0, 0.0, 12, olen=16),
+             _req(1, 0.0, 12, olen=4, ttft_slo=1e-9)]
+    eng = EdgeLoRAEngine(cfg, _ecfg(n_slots=1))
+    s = eng.serve(trace)
+    row = s.slo_row()
+    assert "ttft_p99=" in row and "timeout=1" in row and "p0=0/1" in row
+
+
+# ---------------------------------------------------------------------------
+# workload: dedicated RNG streams leave the base trace untouched
+# ---------------------------------------------------------------------------
+
+
+def _wl(**kw):
+    base = dict(n_adapters=4, request_rate=3.0, duration=6.0,
+                input_range=(8, 24), output_range=(4, 8),
+                vocab_size=256, seed=7)
+    base.update(kw)
+    return WorkloadConfig(**base)
+
+
+def test_slo_knobs_do_not_shift_main_stream():
+    plain = generate_trace(_wl())
+    mixed = generate_trace(_wl(interactive_frac=0.5,
+                               interactive_ttft_slo=1.5,
+                               interactive_tpot_slo=0.2,
+                               long_prompt_frac=0.4,
+                               long_input_range=(16, 24)))
+    assert len(plain) == len(mixed)
+    n_interactive = n_long = 0
+    for p, m in zip(plain, mixed):
+        assert p.arrival_time == m.arrival_time
+        assert p.true_adapter == m.true_adapter
+        assert p.output_len == m.output_len
+        # the base prompt is a prefix of the (possibly extended) prompt
+        assert m.prompt_len >= p.prompt_len
+        assert np.array_equal(np.asarray(m.prompt_tokens)[:p.prompt_len],
+                              np.asarray(p.prompt_tokens))
+        if m.ttft_slo is not None:
+            n_interactive += 1
+            assert m.priority == 0
+            assert m.ttft_slo == 1.5 and m.tpot_slo == 0.2
+        else:
+            assert m.priority == 1
+        n_long += m.prompt_len > p.prompt_len
+    assert 0 < n_interactive < len(mixed)
+    assert 0 < n_long < len(mixed)
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError, match="interactive_frac"):
+        _wl(interactive_frac=1.5)
+    with pytest.raises(ValueError, match="interactive_ttft_slo"):
+        _wl(interactive_frac=0.5, interactive_ttft_slo=0.0)
+    with pytest.raises(ValueError, match="long_input_range"):
+        _wl(long_prompt_frac=0.5, long_input_range=(8, 4))

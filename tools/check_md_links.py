@@ -1,0 +1,107 @@
+"""Markdown link checker for the repo docs (stdlib only).
+
+Walks README.md and docs/*.md, extracts inline links and images, and
+verifies every *local* target resolves: relative paths exist (anchors
+stripped), and ``#fragment`` / ``file.md#fragment`` anchors match a
+heading in the target file (GitHub slug rules: lowercase, punctuation
+dropped, spaces → dashes). External ``http(s)://`` and ``mailto:``
+links are skipped — CI must not depend on the network.
+
+    python tools/check_md_links.py            # repo root implied
+    python tools/check_md_links.py README.md docs/*.md
+
+Exit 0 when every link resolves, 1 with a ``file:line: message`` report
+otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links/images: [text](target) — code spans are stripped first
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_CODE_SPAN = re.compile(r"`[^`]*`")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: strip code ticks/punctuation, lowercase,
+    spaces to dashes."""
+    text = heading.strip().lower().replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(path: Path) -> set:
+    out = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if m:
+            out.add(_slug(m.group(1)))
+    return out
+
+
+def _rel(path: Path, root: Path) -> str:
+    try:
+        return str(path.relative_to(root))
+    except ValueError:  # explicit file argument outside the repo
+        return str(path)
+
+
+def check_file(path: Path, root: Path) -> list:
+    errors = []
+    in_fence = False
+    for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), start=1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(_CODE_SPAN.sub("", line)):
+            target = m.group(1)
+            if target.startswith(_EXTERNAL):
+                continue
+            ref, _, frag = target.partition("#")
+            dest = (path.parent / ref).resolve() if ref else path
+            if ref and not dest.exists():
+                errors.append(f"{_rel(path, root)}:{lineno}: "
+                              f"broken link: {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                if _slug(frag) not in _anchors(dest):
+                    errors.append(f"{_rel(path, root)}:{lineno}: "
+                                  f"missing anchor: {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(__file__).resolve().parent.parent
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        errors.extend(check_file(f, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"# check_md_links: {len(files)} files, {len(errors)} broken",
+          file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
