@@ -69,3 +69,130 @@ def validate_bench_file(path) -> List[str]:
     except json.JSONDecodeError as exc:
         return [f"{path}: invalid JSON ({exc})"]
     return validate_bench_records(records, name=path.name)
+
+
+# ---- TRACE_*.json (serving/trace.py Perfetto export) -------------------
+
+_TRACE_PHASES = {"X", "i", "I", "C", "M", "B", "E"}
+_TRACE_SEGMENTS = (
+    "queue_wait",
+    "select",
+    "load_stall",
+    "prefill",
+    "decode",
+    "preempted",
+)
+
+
+def _check_chrome_events(events, name: str) -> List[str]:
+    errors: List[str] = []
+    if not isinstance(events, list) or not events:
+        return [f"{name}: traceEvents missing or empty"]
+    for i, ev in enumerate(events):
+        where = f"{name}.traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: {type(ev).__name__}, expected dict")
+            continue
+        ph = ev.get("ph")
+        if ph not in _TRACE_PHASES:
+            errors.append(f"{where}: unknown phase {ph!r}")
+        if ph != "M":
+            ts = ev.get("ts")
+            if not _is_number(ts) or not math.isfinite(ts) or ts < 0:
+                errors.append(f"{where}: bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not _is_number(dur) or not math.isfinite(dur) or dur < 0:
+                errors.append(f"{where}: bad dur {dur!r}")
+        if not isinstance(ev.get("name"), str) or not ev.get("name"):
+            errors.append(f"{where}: missing/empty 'name'")
+    return errors
+
+
+def _check_trace_section(section, name: str) -> List[str]:
+    errors: List[str] = []
+    where = f"{name}.edgelora"
+    if not isinstance(section, dict):
+        return [f"{where}: missing or not a dict"]
+    if section.get("version") != 1:
+        errors.append(f"{where}: version != 1")
+    if not isinstance(section.get("meta"), dict):
+        errors.append(f"{where}: missing 'meta' dict")
+    duration = section.get("duration")
+    if not _is_number(duration) or not math.isfinite(duration):
+        errors.append(f"{where}: non-finite duration {duration!r}")
+    events = section.get("events")
+    if not isinstance(events, list) or not events:
+        errors.append(f"{where}: raw event log missing or empty")
+    else:
+        for i, ev in enumerate(events):
+            ew = f"{where}.events[{i}]"
+            if not isinstance(ev, dict):
+                errors.append(f"{ew}: not a dict")
+                continue
+            t = ev.get("t")
+            if not _is_number(t) or not math.isfinite(t):
+                errors.append(f"{ew}: non-finite t {t!r}")
+            for field in ("kind", "track", "name"):
+                if not isinstance(ev.get(field), str) or not ev.get(field):
+                    errors.append(f"{ew}: missing/empty '{field}'")
+    metrics = section.get("metrics")
+    if not isinstance(metrics, dict):
+        errors.append(f"{where}: missing 'metrics' dict")
+    breakdowns = section.get("breakdowns")
+    if not isinstance(breakdowns, dict):
+        errors.append(f"{where}: missing 'breakdowns' dict")
+    else:
+        for rid, bd in breakdowns.items():
+            bw = f"{where}.breakdowns[{rid}]"
+            if not isinstance(bd, dict):
+                errors.append(f"{bw}: not a dict")
+                continue
+            total = 0.0
+            ok = True
+            for seg in _TRACE_SEGMENTS:
+                v = bd.get(seg)
+                if not _is_number(v) or not math.isfinite(v) or v < -1e-9:
+                    errors.append(f"{bw}: bad segment {seg}={v!r}")
+                    ok = False
+                else:
+                    total += v
+            e2e = bd.get("e2e")
+            if not _is_number(e2e) or not math.isfinite(e2e):
+                errors.append(f"{bw}: bad e2e {e2e!r}")
+            elif ok and abs(total - e2e) > 1e-6:
+                errors.append(f"{bw}: sum {total:.9f} != e2e {e2e:.9f}")
+    watchdog = section.get("watchdog")
+    if watchdog is not None and not isinstance(watchdog, dict):
+        errors.append(f"{where}: watchdog is {type(watchdog).__name__}")
+    return errors
+
+
+def validate_trace_json(data, name: str = "<trace>") -> List[str]:
+    """Schema-check one exported engine trace (already-parsed JSON).
+
+    Contract (see docs/observability.md): a Chrome-trace object with a
+    non-empty ``traceEvents`` list of well-formed events (known phases,
+    finite non-negative timestamps/durations) plus an ``edgelora``
+    section carrying the raw event log, metrics series, per-request
+    latency breakdowns whose segments sum to e2e, and the watchdog
+    report. Returns violations (empty == valid).
+    """
+    if not isinstance(data, dict):
+        got = type(data).__name__
+        return [f"{name}: top level is {got}, expected an object"]
+    errors = _check_chrome_events(data.get("traceEvents"), name)
+    errors.extend(_check_trace_section(data.get("edgelora"), name))
+    return errors
+
+
+def validate_trace_file(path) -> List[str]:
+    """Schema-check one ``TRACE_*.json``; returns violations."""
+    path = Path(path)
+    if not path.exists():
+        return [f"{path}: missing"]
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError as exc:
+        return [f"{path}: invalid JSON ({exc})"]
+    return validate_trace_json(data, name=path.name)

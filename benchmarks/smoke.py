@@ -14,7 +14,7 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks.schema import validate_bench_file
+from benchmarks.schema import validate_bench_file, validate_trace_file
 
 
 def registry():
@@ -31,8 +31,51 @@ def registry():
     }
 
 
+def trace_smoke(artifact: str = "TRACE_smoke.json"):
+    """One traced serve through the launcher (``--trace``), then the
+    trace schema check: exporter bitrot — unbalanced spans, non-finite
+    timestamps, breakdowns that stop summing to e2e — fails here."""
+    from repro.launch.serve import main as serve_main
+
+    rc = serve_main(
+        [
+            "--arch",
+            "qwen2-0.5b",
+            "--reduced",
+            "--n-adapters",
+            "6",
+            "--n-slots",
+            "4",
+            "--rate",
+            "4.0",
+            "--duration",
+            "3",
+            "--max-ctx",
+            "128",
+            "--kv-backend",
+            "paged",
+            "--trace",
+            artifact,
+        ]
+    )
+    if rc != 0:
+        return [f"serve --trace exited {rc}"]
+    return validate_trace_file(artifact)
+
+
 def main() -> int:
     failures = []
+    t0 = time.time()
+    try:
+        errors = trace_smoke()
+    except Exception as exc:  # noqa: BLE001 - report, keep smoking
+        errors = [f"crashed: {exc!r}"]
+    failures.extend(f"trace: {e}" for e in errors)
+    status = "FAIL" if errors else "ok"
+    print(
+        f"# smoke trace: {status} ({time.time() - t0:.1f}s, TRACE_smoke.json)",
+        file=sys.stderr,
+    )
     for name, (artifact, run) in registry().items():
         t0 = time.time()
         try:

@@ -124,6 +124,14 @@ class AdapterMemoryManager:
         # prefetched-but-never-demanded adapters (hit/waste accounting)
         self._prefetched: set = set()
         self.stats = CacheStats()
+        # optional observer: callable(name, now, args) — the engine
+        # wires serving/trace.py's channel hook here during a traced
+        # serve(); None (default) costs one condition per event site
+        self.on_event: Optional[Callable[[str, float, Dict], None]] = None
+
+    def _event(self, name: str, now: float, **args) -> None:
+        if self.on_event is not None:
+            self.on_event(name, now, args)
 
     # -- queries ---------------------------------------------------------
 
@@ -194,11 +202,13 @@ class AdapterMemoryManager:
                 # retry storm must not skew the hit-rate stats
                 raise PoolExhaustedError(
                     "adapter pool exhausted: all resident adapters pinned")
-            self._evict(victim)
+            self._evict(victim, now)
         self.stats.misses += 1
         slot = self.free_slots.pop()
         ready = self._start_load(adapter_id, slot, now)
         self._touch(adapter_id)
+        self._event("load", now, adapter=adapter_id, slot=slot,
+                    ready=ready, load_seconds=self.load_seconds)
         return Reservation(adapter_id, slot, True, ready, ready - now)
 
     def prefetch(self, adapter_id: int, now: float = 0.0,
@@ -217,11 +227,13 @@ class AdapterMemoryManager:
             victim = self._pick_victim(exclude=protect)
             if victim is None:
                 return None
-            self._evict(victim)
+            self._evict(victim, now)
         slot = self.free_slots.pop()
         ready = self._start_load(adapter_id, slot, now)
         self._prefetched.add(adapter_id)
         self.stats.prefetch_issued += 1
+        self._event("prefetch", now, adapter=adapter_id, slot=slot,
+                    ready=ready, load_seconds=self.load_seconds)
         return Reservation(adapter_id, slot, True, ready, ready - now)
 
     def prefill_random(self, adapter_ids: List[int]) -> None:
@@ -263,17 +275,20 @@ class AdapterMemoryManager:
         self.loading[adapter_id] = ready
         return ready
 
-    def _evict(self, victim: int) -> None:
+    def _evict(self, victim: int, now: float = 0.0) -> None:
         slot = self.resident.pop(victim)
         self.free_slots.append(slot)
         self.stats.evictions += 1
-        if victim in self.loading:
+        cancelled = victim in self.loading
+        if cancelled:
             # in-flight load cancelled; channel time is not refunded
             del self.loading[victim]
             self.stats.cancelled_loads += 1
         if victim in self._prefetched:
             self._prefetched.discard(victim)
             self.stats.prefetch_waste += 1
+        self._event("cancel" if cancelled else "evict", now,
+                    adapter=victim, slot=slot)
 
     def _touch(self, adapter_id: int) -> None:
         self.use_counts[adapter_id] += 1

@@ -136,6 +136,16 @@ def main(argv=None) -> int:
     ap.add_argument("--no-router-batching", dest="router_batching",
                     action="store_false",
                     help="one router forward per SELECTING slot")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record an engine trace and write Perfetto/"
+                         "Chrome-trace JSON to PATH (open in "
+                         "https://ui.perfetto.dev or chrome://tracing; "
+                         "the file also carries the raw event log, "
+                         "metrics time series, per-request latency "
+                         "breakdowns, and the jit-recompile watchdog "
+                         "report under the 'edgelora' key — see "
+                         "docs/observability.md). Token streams and the "
+                         "summary are bit-identical with or without it")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
@@ -180,12 +190,21 @@ def main(argv=None) -> int:
         disk_bandwidth=args.disk_bandwidth,
         prefill_batching=args.prefill_batching,
         router_batching=args.router_batching, seed=args.seed)
+    tracer = None
+    if args.trace:
+        from repro.serving.trace import EngineTracer
+        tracer = EngineTracer()
     try:
-        engine = EdgeLoRAEngine(cfg, ecfg)
+        engine = EdgeLoRAEngine(cfg, ecfg, tracer=tracer)
     except OutOfMemoryError as e:
         print(f"OOM: {e}")
         return 2
     summary = engine.serve(trace)
+    if tracer is not None:
+        tracer.export(args.trace)
+        print(f"# trace written to {args.trace} "
+              f"({len(tracer.events)} events; open in ui.perfetto.dev "
+              f"or inspect with tools/trace_report.py)", file=sys.stderr)
     print(f"# lora_backend={engine.lora_backend} "
           f"kv_backend={engine.kv_backend}", file=sys.stderr)
     if args.json:

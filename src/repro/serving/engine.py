@@ -120,6 +120,8 @@ from repro.serving import kvpool as kvlib
 from repro.serving.kvpool import PagedKVPool
 from repro.serving.metrics import ServingSummary, summarize
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.trace import (EngineTracer, JitRecompileError,
+                                 jit_cache_report)
 
 
 class OutOfMemoryError(RuntimeError):
@@ -231,9 +233,14 @@ class EngineConfig:
 
 class EdgeLoRAEngine:
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
-                 router=None, params=None):
+                 router=None, params=None,
+                 tracer: Optional[EngineTracer] = None):
         self.cfg = cfg
         self.ecfg = engine_cfg
+        # opt-in observability (serving/trace.py): every instrumentation
+        # site below guards on `tracer is not None`, so the default path
+        # records nothing and stays bit-identical to an untraced engine
+        self.tracer = tracer
         # concrete batched-LoRA backend for this process ('einsum'|'sgmv')
         self.lora_backend, self._sgmv_interpret = resolve_lora_exec(
             engine_cfg.lora_backend or cfg.lora_backend)
@@ -585,10 +592,15 @@ class EdgeLoRAEngine:
         padded = min(1 << (k - 1).bit_length(), self.ecfg.n_slots)
         return group + [group[0]] * (padded - k)
 
-    def _timed(self, key, fn, *args):
+    def _timed(self, key, fn, *args, now=None, requests=None):
         """Run fn; charge its measured duration (first call per key warms
-        the jit cache and is *not* charged)."""
-        if key not in self._durations:
+        the jit cache and is *not* charged). With a tracer attached and
+        ``now`` given, the charge lands on the trace as a compute span
+        (first call per key also as a jit-compile event — the recompile
+        watchdog's raw signal); ``requests`` names the real group members
+        the span served (padding replicas excluded)."""
+        warm = key not in self._durations
+        if warm:
             out = fn(*args)  # compile + run (warmup, uncharged)
             jax.block_until_ready(out)
             t0 = time.perf_counter()
@@ -603,6 +615,11 @@ class EdgeLoRAEngine:
                 time.perf_counter() - t0)
         dt = self._durations[key] * self.ecfg.time_scale
         self.busy_time += dt
+        tr = self.tracer
+        if tr is not None and now is not None:
+            if warm:
+                tr.compile(now, key)
+            tr.compute(now, dt, key, requests)
         return out, dt
 
     # ------------------------------------------------------------------
@@ -660,6 +677,22 @@ class EdgeLoRAEngine:
         self.load_stall_seconds = 0.0
         self._serve_loads0 = self.manager.stats.loads
         self.manager.reset_channel()
+        # tracing (opt-in): open the run, then wire the channel/arena
+        # event hooks onto the manager and pool for the duration of this
+        # serve — the hooks are read-only observers, unhooked at the end
+        tr = self.tracer
+        if tr is not None:
+            tr.begin(now, ecfg.n_slots, meta={
+                "policy": ecfg.policy, "kv_backend": self.kv_backend,
+                "lora_backend": self.lora_backend,
+                "async_swap": ecfg.async_swap,
+                "prefill_chunk": ecfg.prefill_chunk,
+                "prefix_cache": self.prefix_enabled,
+                "buckets": list(self._buckets),
+                "n_requests": len(queue)})
+            self.manager.on_event = tr.channel_hook
+            if self.paged:
+                self.kvpool.on_event = tr.arena_hook
         active_adapter: Optional[int] = None  # llamacpp single-active mode
         dlora_mode = "unmerged"               # dlora dynamic mode
         dlora_merged_adapter: Optional[int] = None
@@ -709,6 +742,9 @@ class EdgeLoRAEngine:
                         now += cost
                         dlora_mode, dlora_merged_adapter = (want_mode,
                                                             want_adapter)
+                        if tr is not None:
+                            tr.sched(now, "merge_switch", mode=want_mode,
+                                     adapter=want_adapter, cost=cost)
             while idle and arrivals_ready():
                 req = self._ready[0][3]
                 if ecfg.admission_control and req.ttft_slo is not None \
@@ -728,6 +764,8 @@ class EdgeLoRAEngine:
                     # admission charges nothing. +1: the first decode
                     # write must never OOM right after admission.
                     self.kv_deferrals += 1
+                    if tr is not None:
+                        tr.sched(now, "defer_kv", request=req)
                     break
                 if ecfg.policy == "llamacpp":
                     want = req.true_adapter
@@ -735,18 +773,26 @@ class EdgeLoRAEngine:
                         active_adapter = want
                         # merge the adapter into the base weights
                         now += 2 * self.adapter_bytes / ecfg.mem_bandwidth
+                        if tr is not None:
+                            tr.sched(now, "merge_switch", adapter=want)
                     if want != active_adapter:
                         if self.slots.any_active:
                             break  # must drain before switching adapters
                         # unmerge old + merge new
                         now += 4 * self.adapter_bytes / ecfg.mem_bandwidth
                         active_adapter = want
+                        if tr is not None:
+                            tr.sched(now, "merge_switch", adapter=want)
                 heapq.heappop(self._ready)
                 slot = idle.pop()
                 slot.assign(req)
                 req.admit_time = now
                 slot.admit_seq = self._admit_counter
                 self._admit_counter += 1
+                if tr is not None:
+                    tr.sched(now, "admit", request=req, slot=slot.index)
+                    tr.transition(now, slot.index, "idle", "selecting",
+                                  req)
                 if self.paged:
                     self.kvpool.register(req.request_id)
                     key = (self._admission_exec_key(req, dlora_mode)
@@ -789,8 +835,11 @@ class EdgeLoRAEngine:
                 for b, group in score_groups.items():
                     rows = self._pad_group(group)
                     toks = jnp.stack([s.padded_prompt for s in rows])
+                    rids = ([s.request.request_id for s in group]
+                            if tr is not None else None)
                     sb, dt = self._timed(("router", b, len(rows)),
-                                         self.router.scores_batch, toks)
+                                         self.router.scores_batch, toks,
+                                         now=now, requests=rids)
                     now += dt
                     self.router_steps += 1
                     sb = np.asarray(sb)
@@ -806,11 +855,16 @@ class EdgeLoRAEngine:
                             res = self.manager.acquire(
                                 req.selected_adapter, now=now)
                         except PoolExhaustedError:
+                            if tr is not None:
+                                tr.sched(now, "defer_pool", request=req)
                             continue  # pool fully pinned: defer (see below)
                         now = self._finish_acquire(slot, res, now)
                     else:
                         slot.adapter_slot = 0
                         slot.state = SlotState.PREFILL
+                        if tr is not None:
+                            tr.transition(now, slot.index, "selecting",
+                                          "prefill", req)
                     progressed = True
                     continue
                 slot.merged = False
@@ -838,9 +892,12 @@ class EdgeLoRAEngine:
                             # solo fallback (router_batching off): one
                             # router forward ≈ one prompt pass (Table 6)
                             toks = self._slot_prompt(slot)[None, :]
+                            rids = ([req.request_id]
+                                    if tr is not None else None)
                             sb, dt = self._timed(("router", slot.bucket, 1),
                                                  self.router.scores_batch,
-                                                 toks)
+                                                 toks, now=now,
+                                                 requests=rids)
                             now += dt
                             self.router_steps += 1
                             scores = np.asarray(sb)[0]
@@ -864,6 +921,8 @@ class EdgeLoRAEngine:
                         # completion unpins — pins are only held by
                         # LOADING/PREFILL/GENERATE slots, so the loop
                         # always progresses elsewhere
+                        if tr is not None:
+                            tr.sched(now, "defer_pool", request=req)
                         continue
                     slot.sel_scores = None
                     now = self._finish_acquire(slot, res, now)
@@ -871,6 +930,9 @@ class EdgeLoRAEngine:
                     slot.sel_scores = None
                     slot.adapter_slot = 0  # merged weights: adapter rides W
                     slot.state = SlotState.PREFILL
+                    if tr is not None:
+                        tr.transition(now, slot.index, "selecting",
+                                      "prefill", req)
                 if self.prefix_enabled and \
                         self._admission_exec_key(req, dlora_mode) is None:
                     # AAS-routed: the adapter was unknown at admission —
@@ -884,6 +946,9 @@ class EdgeLoRAEngine:
                 for slot in self.slots.in_state(SlotState.LOADING):
                     if slot.ready_time <= now:
                         slot.state = SlotState.PREFILL
+                        if tr is not None:
+                            tr.transition(now, slot.index, "loading",
+                                          "prefill", slot.request)
                         progressed = True
                 # queue-ahead prefetch: start transfers for upcoming
                 # demand while the channel would otherwise sit idle
@@ -944,9 +1009,11 @@ class EdgeLoRAEngine:
                 # allocate this step's page per sequence up front; a dry
                 # arena preempts the youngest admission (LIFO restart —
                 # greedy decode recomputes the identical stream later)
-                gen = self._secure_decode_blocks(gen)
+                gen = self._secure_decode_blocks(gen, now)
                 progressed = True  # preemption alone is progress
             if gen:
+                rids = ([s.request.request_id for s in gen]
+                        if tr is not None else None)
                 tokens = np.zeros((ecfg.n_slots,), np.int32)
                 pos = np.zeros((ecfg.n_slots,), np.int32)
                 sids = np.zeros((ecfg.n_slots,), np.int32)
@@ -965,23 +1032,25 @@ class EdgeLoRAEngine:
                             ("decode_merged",), self._decode_merged_paged,
                             self.params, jnp.asarray(tokens), self.cache,
                             tables, lengths, plens, bwlens,
-                            jnp.asarray(pos))
+                            jnp.asarray(pos), now=now, requests=rids)
                     else:
                         (next_toks, self.cache), dt = self._timed(
                             ("decode",), self._decode_paged, self.params,
                             self.lora_pool, jnp.asarray(tokens),
                             self.cache, tables, lengths, plens, bwlens,
-                            jnp.asarray(pos), jnp.asarray(sids))
+                            jnp.asarray(pos), jnp.asarray(sids),
+                            now=now, requests=rids)
                 elif merged_step:
                     (next_toks, self.cache), dt = self._timed(
                         ("decode_merged",), self._decode_merged,
                         self.params, jnp.asarray(tokens), self.cache,
-                        jnp.asarray(pos))
+                        jnp.asarray(pos), now=now, requests=rids)
                 else:
                     (next_toks, self.cache), dt = self._timed(
                         ("decode",), self._decode, self.params,
                         self.lora_pool, jnp.asarray(tokens), self.cache,
-                        jnp.asarray(pos), jnp.asarray(sids))
+                        jnp.asarray(pos), jnp.asarray(sids),
+                        now=now, requests=rids)
                 now += dt
                 self.decode_steps += 1
                 next_np = np.asarray(next_toks)
@@ -997,6 +1066,9 @@ class EdgeLoRAEngine:
                         if ecfg.policy != "llamacpp" \
                                 and not slot.merged:
                             self.manager.unpin(req.selected_adapter)
+                        if tr is not None:
+                            tr.transition(now, slot.index, "generate",
+                                          "idle", req)
                         if self.paged:
                             self.kvpool.release(req.request_id)
                         completed.append(slot.release())
@@ -1006,6 +1078,20 @@ class EdgeLoRAEngine:
             step_busy = self.busy_time - busy0
             if step_busy > 0.0:
                 self._note_step(step_busy)
+
+            # ---- once-per-step metrics sampling (tracing only) --------
+            if tr is not None:
+                if self.paged:
+                    tr.metrics.gauge("arena_blocks_used").set(
+                        self.kvpool.used_blocks)
+                tr.sample(
+                    now,
+                    queue_depth=len(self._ready),
+                    active_slots=sum(s.state != SlotState.IDLE
+                                     for s in self.slots.slots),
+                    decode_batch=len(gen),
+                    resident_adapters=self.manager.n_resident,
+                    loading_adapters=len(self.manager.loading))
 
             # ---- idle / load-blocked: jump to the earliest event ------
             if not progressed:
@@ -1030,6 +1116,22 @@ class EdgeLoRAEngine:
                 else:
                     break
 
+        if tr is not None:
+            tr.finish(now)
+            self.manager.on_event = None
+            if self.paged:
+                self.kvpool.on_event = None
+            # recompile watchdog: audit every shape the jit cache holds
+            # against the bound the power-of-two group padding promises
+            tr.watchdog_report = jit_cache_report(
+                self._durations.keys(), buckets=self._buckets,
+                n_slots=ecfg.n_slots, prefill_chunk=ecfg.prefill_chunk,
+                prefix_cache=self.prefix_enabled,
+                block_size=ecfg.kv_block_size, max_ctx=ecfg.max_ctx)
+            if tr.strict_watchdog and not tr.watchdog_report["ok"]:
+                raise JitRecompileError(
+                    "jit cache exceeded the documented shape bound:\n  "
+                    + "\n  ".join(tr.watchdog_report["violations"]))
         duration = max(now, 1e-9)
         kv_stats = None
         if self.paged:
@@ -1073,6 +1175,9 @@ class EdgeLoRAEngine:
                              "max_step_seconds":
                                  (self.max_step_seconds
                                   if self._step_hist else None),
+                             "latency_breakdown":
+                                 (tr.breakdown_summary()
+                                  if tr is not None else None),
                          })
 
     # ------------------------------------------------------------------
@@ -1124,6 +1229,8 @@ class EdgeLoRAEngine:
         req.rejected = why
         req.reject_time = now
         rejected.append(req)
+        if self.tracer is not None:
+            self.tracer.sched(now, why, request=req, wait=wait)
         return True
 
     def _note_ttft(self, bucket: int, req: Request, t_first: float) -> None:
@@ -1157,6 +1264,9 @@ class EdgeLoRAEngine:
         run the suffix-only prefill over their spliced block tables.
         Returns the wall-time charged for the group (once, not per
         member)."""
+        tr = self.tracer
+        rids = ([s.request.request_id for s in group]
+                if tr is not None else None)
         rows = self._pad_group(group)
         lengths = jnp.asarray(
             np.fromiter((s.request.prompt_len for s in rows), np.int32,
@@ -1183,7 +1293,7 @@ class EdgeLoRAEngine:
                 (first, cacheb), dt = self._timed(
                     ("prefill_sfx_merged", bucket, prefix_len, len(rows)),
                     fn, self.params, toks, cacheb, self.cache, tables,
-                    lengths)
+                    lengths, now=now, requests=rids)
             else:
                 sids = jnp.asarray(
                     np.fromiter((s.adapter_slot for s in rows), np.int32,
@@ -1193,7 +1303,8 @@ class EdgeLoRAEngine:
                 (first, cacheb), dt = self._timed(
                     ("prefill_sfx", bucket, prefix_len, len(rows)),
                     fn, self.params, self.lora_pool, toks, cacheb,
-                    self.cache, tables, sids, lengths)
+                    self.cache, tables, sids, lengths,
+                    now=now, requests=rids)
             self.cache = self._scatter_suffix(
                 self.cache, cacheb, tables, lengths,
                 prefix_len=prefix_len, suffix_len=bucket - prefix_len)
@@ -1203,7 +1314,7 @@ class EdgeLoRAEngine:
                 (first, cacheb), dt = self._timed(
                     ("prefill_merged", bucket, len(rows)),
                     self._prefill_merged, self.params, toks, cacheb,
-                    lengths)
+                    lengths, now=now, requests=rids)
             else:
                 sids = jnp.asarray(
                     np.fromiter((s.adapter_slot for s in rows), np.int32,
@@ -1211,7 +1322,7 @@ class EdgeLoRAEngine:
                 (first, cacheb), dt = self._timed(
                     ("prefill", bucket, len(rows)), self._prefill,
                     self.params, self.lora_pool, toks, cacheb, sids,
-                    lengths)
+                    lengths, now=now, requests=rids)
             slot_idx = jnp.asarray(
                 np.fromiter((s.index for s in rows), np.int32,
                             count=len(rows)))
@@ -1234,6 +1345,11 @@ class EdgeLoRAEngine:
             req.generated = 1
             req.tokens = [slot.last_token]
             slot.state = SlotState.GENERATE
+            if tr is not None:
+                # the group's charged step ends at now + dt — exactly
+                # when the request's first token exists
+                tr.transition(now + dt, slot.index, "prefill",
+                              "generate", req)
             self._note_ttft(slot.bucket, req, now + dt)
         if self.prefix_enabled:
             # index every full prompt block (cold rows donate fresh
@@ -1259,6 +1375,9 @@ class EdgeLoRAEngine:
         are shape-keyed exactly like the un-chunked paths, so a chunk
         costs what a same-shape prefill costs. Returns the wall-time
         charged for the group."""
+        tr = self.tracer
+        rids = ([s.request.request_id for s in group]
+                if tr is not None else None)
         rows = self._pad_group(group)
         end = start + width
         real = np.fromiter((s.request.prompt_len for s in rows), np.int32,
@@ -1286,26 +1405,27 @@ class EdgeLoRAEngine:
                     (first, cacheb), dt = self._timed(
                         ("prefill_merged", width, len(rows)),
                         self._prefill_merged, self.params, toks, cacheb,
-                        lengths)
+                        lengths, now=now, requests=rids)
                 else:
                     (first, cacheb), dt = self._timed(
                         ("prefill", width, len(rows)), self._prefill,
                         self.params, self.lora_pool, toks, cacheb, sids,
-                        lengths)
+                        lengths, now=now, requests=rids)
             elif merged:
                 fn = functools.partial(self._prefill_suffix_merged,
                                        prefix_len=start)
                 (first, cacheb), dt = self._timed(
                     ("prefill_sfx_merged", end, start, len(rows)),
                     fn, self.params, toks, cacheb, self.cache, tables,
-                    lengths)
+                    lengths, now=now, requests=rids)
             else:
                 fn = functools.partial(self._prefill_suffix,
                                        prefix_len=start)
                 (first, cacheb), dt = self._timed(
                     ("prefill_sfx", end, start, len(rows)),
                     fn, self.params, self.lora_pool, toks, cacheb,
-                    self.cache, tables, sids, lengths)
+                    self.cache, tables, sids, lengths,
+                    now=now, requests=rids)
             # scatter_suffix handles start == 0 too (mini ring index ==
             # position); pad columns past each row's real length land in
             # the trash page
@@ -1321,12 +1441,12 @@ class EdgeLoRAEngine:
                     (first, cacheb), dt = self._timed(
                         ("prefill_merged", width, len(rows)),
                         self._prefill_merged, self.params, toks, cacheb,
-                        lengths)
+                        lengths, now=now, requests=rids)
                 else:
                     (first, cacheb), dt = self._timed(
                         ("prefill", width, len(rows)), self._prefill,
                         self.params, self.lora_pool, toks, cacheb, sids,
-                        lengths)
+                        lengths, now=now, requests=rids)
                 # fresh slots: the whole-ring copy is correct (positions
                 # past the chunk are still at their invalid init state)
                 self.cache = self._write_slots(self.cache, cacheb,
@@ -1339,14 +1459,15 @@ class EdgeLoRAEngine:
                         ("prefill_sfx_dense_merged", end, start,
                          len(rows)),
                         fn, self.params, toks, cacheb, self.cache,
-                        slot_idx, lengths)
+                        slot_idx, lengths, now=now, requests=rids)
                 else:
                     fn = functools.partial(self._prefill_sfx_dense,
                                            prefix_len=start)
                     (first, cacheb), dt = self._timed(
                         ("prefill_sfx_dense", end, start, len(rows)),
                         fn, self.params, self.lora_pool, toks, cacheb,
-                        self.cache, slot_idx, sids, lengths)
+                        self.cache, slot_idx, sids, lengths,
+                        now=now, requests=rids)
                 self.cache = self._dense_scatter_suffix(
                     self.cache, cacheb, slot_idx, jnp.asarray(real),
                     prefix_len=start, suffix_len=width)
@@ -1365,6 +1486,9 @@ class EdgeLoRAEngine:
                 req.generated = 1
                 req.tokens = [slot.last_token]
                 slot.state = SlotState.GENERATE
+                if tr is not None:
+                    tr.transition(now + dt, slot.index, "prefill",
+                                  "generate", req)
                 self._note_ttft(slot.bucket, req, now + dt)
                 if self.prefix_enabled:
                     self.prefix_cache.insert(
@@ -1478,19 +1602,40 @@ class EdgeLoRAEngine:
         ready_time — the single explicit charge per load that replaced
         the old ``_pending_load_cost`` side-channel. Returns the
         (possibly advanced) clock."""
+        tr = self.tracer
         self.manager.pin(res.adapter_id)
         slot.adapter_slot = res.slot
         if self.ecfg.async_swap:
             if res.ready_time > now:
                 slot.ready_time = res.ready_time
                 slot.state = SlotState.LOADING
+                if tr is not None:
+                    tr.transition(now, slot.index, "selecting", "loading",
+                                  slot.request, adapter=res.adapter_id)
             else:
                 slot.state = SlotState.PREFILL
+                if tr is not None:
+                    tr.transition(now, slot.index, "selecting", "prefill",
+                                  slot.request)
             return now
         if res.ready_time > now:
             self.load_stall_seconds += res.ready_time - now
+            # sync mode still spends a real LOADING interval on the
+            # timeline (the whole engine stalls through it) — record it
+            # as one, so load_stall shows up in the latency breakdown
+            if tr is not None:
+                tr.transition(now, slot.index, "selecting", "loading",
+                              slot.request, adapter=res.adapter_id)
             now = res.ready_time
+            slot.state = SlotState.PREFILL
+            if tr is not None:
+                tr.transition(now, slot.index, "loading", "prefill",
+                              slot.request)
+            return now
         slot.state = SlotState.PREFILL
+        if tr is not None:
+            tr.transition(now, slot.index, "selecting", "prefill",
+                          slot.request)
         return now
 
     def _known_adapter(self, req: Request, dlora_mode: str) -> Optional[int]:
@@ -1591,7 +1736,8 @@ class EdgeLoRAEngine:
         return (jnp.asarray(tables), jnp.asarray(lengths),
                 jnp.asarray(plens), jnp.asarray(bwlens))
 
-    def _secure_decode_blocks(self, gen: List[Slot]) -> List[Slot]:
+    def _secure_decode_blocks(self, gen: List[Slot],
+                              now: float) -> List[Slot]:
         """Allocate one page-extension per decoding sequence, oldest
         admission first. When the arena is dry, preempt the *youngest*
         active slot (LIFO, vLLM-style restart-recompute): its pages are
@@ -1599,6 +1745,8 @@ class EdgeLoRAEngine:
         and greedy decode later reproduces the identical stream. The
         init-time capacity check (arena ≥ one max_ctx sequence)
         guarantees the oldest admission always makes progress."""
+        if self.tracer is not None:
+            self.tracer.clock(now)  # arena events land at this step
         secured: List[Slot] = []
         for slot in sorted(gen, key=lambda s: s.admit_seq):
             if slot.state != SlotState.GENERATE:
@@ -1610,9 +1758,10 @@ class EdgeLoRAEngine:
                            if s.state != SlotState.IDLE and s is not slot
                            and s not in secured]
                 if victims:
-                    self._preempt(max(victims, key=lambda s: s.admit_seq))
+                    self._preempt(max(victims,
+                                      key=lambda s: s.admit_seq), now)
                 else:
-                    self._preempt(slot)
+                    self._preempt(slot, now)
                     alive = False
                     break
             if alive:
@@ -1620,11 +1769,20 @@ class EdgeLoRAEngine:
                 secured.append(slot)
         return [s for s in gen if s in secured]
 
-    def _preempt(self, slot: Slot) -> None:
+    def _preempt(self, slot: Slot, now: float) -> None:
         """Evict an in-flight request to free its KV pages: restart
         semantics — all partial output is discarded and the request
         re-admits (and re-prefills) once capacity returns."""
         req = slot.request
+        tr = self.tracer
+        if tr is not None:
+            # close the slot's open span before release mutates state;
+            # preempted=True folds its in-slot time into the request's
+            # 'preempted' (discarded-work) breakdown segment
+            tr.transition(now, slot.index, slot.state.value, "idle",
+                          req, preempted=True)
+            tr.sched(now, "preempt", request=req, slot=slot.index)
+            tr.sched(now, "requeue", request=req)
         self.kvpool.release(req.request_id)
         if self.ecfg.policy != "llamacpp" and not slot.merged \
                 and slot.state in (SlotState.LOADING, SlotState.PREFILL,

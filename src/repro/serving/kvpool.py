@@ -83,6 +83,14 @@ class PagedKVPool:
         # .reclaim(k) -> int, .note_block_ref(blk) (refcount-change hook)
         self.reclaimer: Optional[Any] = None
         self.stats = KVPoolStats()
+        # optional observer: callable(name, args) — the engine wires
+        # serving/trace.py's arena hook here during a traced serve();
+        # None (default) costs one condition per event site
+        self.on_event: Optional[Any] = None
+
+    def _event(self, name: str, **args) -> None:
+        if self.on_event is not None:
+            self.on_event(name, args)
 
     # ------------------------------------------------------------------
 
@@ -114,6 +122,7 @@ class PagedKVPool:
         Callers must have checked ``_available()``."""
         if not self.free and self.reclaimer is not None:
             self.reclaimer.reclaim(1)
+            self._event("reclaim", blocks=1)
         blk = self.free.pop()
         self.refs[blk] = 1
         self.stats.allocs += 1
@@ -157,6 +166,7 @@ class PagedKVPool:
         for blk in self.tables.pop(seq_id):
             self.drop_ref(blk)
         del self.lengths[seq_id]
+        self._event("free", seq=seq_id, used=self.used_blocks)
 
     def append_tokens(self, seq_id: int, n: int = 1) -> List[int]:
         """Extend seq by n tokens, allocating pages on demand. Returns the
@@ -169,6 +179,8 @@ class PagedKVPool:
         if n_new > self._available():
             # all-or-nothing: never leave a partially-extended table
             self.stats.oom_events += 1
+            self._event("oom", seq=seq_id, need=n_new,
+                        free=len(self.free))
             raise OutOfBlocksError(
                 f"KV arena exhausted: need {n_new} blocks, "
                 f"{len(self.free)} free of {self.n_blocks} × "
@@ -180,6 +192,9 @@ class PagedKVPool:
             new.append(blk)
         self.lengths[seq_id] = length + n
         self.stats.peak_used = max(self.stats.peak_used, self.used_blocks)
+        if new:
+            self._event("alloc", seq=seq_id, blocks=len(new),
+                        used=self.used_blocks)
         return new
 
     def adopt_prefix(self, seq_id: int, shared: List[int], n_tokens: int,
@@ -216,6 +231,10 @@ class PagedKVPool:
         self.tables[seq_id] = table
         self.lengths[seq_id] = n_tokens
         self.stats.peak_used = max(self.stats.peak_used, self.used_blocks)
+        self._event("adopt", seq=seq_id, shared=len(shared),
+                    cow=pair is not None, used=self.used_blocks)
+        if pair is not None:
+            self._event("cow", seq=seq_id, src=pair[0], dst=pair[1])
         return pair
 
     def replace_prefix(self, seq_id: int, shared: List[int],
@@ -246,6 +265,10 @@ class PagedKVPool:
             new_prefix[-1] = dst
             pair = (shared[-1], dst)
         self.tables[seq_id] = new_prefix + table[len(shared):]
+        self._event("splice", seq=seq_id, shared=len(shared),
+                    cow=pair is not None, used=self.used_blocks)
+        if pair is not None:
+            self._event("cow", seq=seq_id, src=pair[0], dst=pair[1])
         return pair
 
     def slot_of(self, seq_id: int, pos: int):

@@ -11,15 +11,43 @@ requests the admission controller rejected (``Request.rejected`` in
 aggregate** (they produced no tokens) but **included in SLO-attainment
 denominators** (a shed deadline is a missed deadline) and reported via
 ``shed_requests``/``timeout_requests``/``slo_stats``.
+
+Zero-completed runs (nothing finished: everything rejected, the trace
+was empty, or ``max_sim_time`` cut the run short) report **NaN** for
+every latency-shaped aggregate — ``avg_latency``, ``avg_first_token``,
+all percentiles, and ``slo_attainment`` alike. There is no attainment
+evidence without a completion, so NaN ("no data"), not 0.0 ("all
+missed"). Rate-shaped fields (``throughput``, ``tokens_per_second``)
+stay 0.0: zero events per second is well-defined.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.slots import Request
+
+
+def fmt_num(v, digits: int = 3) -> str:
+    """``'n/a'`` for None/NaN/inf, fixed-point otherwise — the one
+    number format every digest row (and ``tools/trace_report.py``)
+    shares."""
+    if v is None:
+        return "n/a"
+    v = float(v)
+    if not np.isfinite(v):
+        return "n/a"
+    return f"{v:.{digits}f}"
+
+
+def format_digest(fields: Sequence[Tuple[str, object]]) -> str:
+    """Render ``(key, value)`` pairs as the ``k=v;k=v`` single-line
+    digest used by every ``*_row`` method below (and reused by
+    ``tools/trace_report.py``): ';'-separated so a digest stays one
+    column in the benchmarks' ``name,us_per_call,derived`` CSV rows."""
+    return ";".join(f"{k}={v}" for k, v in fields)
 
 
 @dataclass
@@ -113,6 +141,15 @@ class ServingSummary:
     # is the evidence that the chunk budget bounds step time.
     step_time_hist: Optional[Dict[str, int]] = None
     max_step_seconds: Optional[float] = None  # largest single iteration
+    # ---- traced-run latency breakdown (tracer attached only) ----------
+    # {"n": completed, "mean": {segment: seconds}, "per_request":
+    #   {request_id: {queue_wait, select, load_stall, prefill, decode,
+    #    preempted, e2e, admits, prefill_chunks}}}
+    # — the six segments partition each completed request's
+    # arrival→finish interval on the virtual clock, so they sum to e2e
+    # (serving/trace.py derives them from slot state-transition spans);
+    # None when the engine ran without a tracer
+    latency_breakdown: Optional[Dict] = None
 
     def row(self) -> Dict[str, float]:
         return {k: getattr(self, k) for k in (
@@ -121,24 +158,30 @@ class ServingSummary:
 
     def batching_row(self) -> str:
         """Compact step-count digest for benchmark CSV derived fields
-        (';'-joined: the digest must stay a single CSV column in the
-        ``name,us_per_call,derived`` row format)."""
+        (rendered by ``format_digest``: the digest must stay a single
+        CSV column in the ``name,us_per_call,derived`` row format)."""
         hist = "|".join(f"{b}x{n}" for b, n in
                         sorted((self.prefill_batch_hist or {}).items()))
-        return (f"pf_steps={self.prefill_steps};"
-                f"router_steps={self.router_steps};"
-                f"dec_steps={self.decode_steps};pf_hist={hist or 'n/a'}")
+        return format_digest([
+            ("pf_steps", self.prefill_steps),
+            ("router_steps", self.router_steps),
+            ("dec_steps", self.decode_steps),
+            ("pf_hist", hist or "n/a")])
 
     def kv_row(self) -> str:
         """Compact KV-arena digest (same single-CSV-column contract as
         ``batching_row``); 'kv=dense' when the run wasn't paged."""
         kv = self.kv_stats
         if not kv:
-            return f"kv=dense;peak_active={self.peak_active_slots}"
-        return (f"kv=paged;blocks={kv['n_blocks']}x{kv['block_size']};"
-                f"peak_blocks={kv['peak_used']};"
-                f"defer={kv['deferrals']};preempt={kv['preemptions']};"
-                f"peak_active={self.peak_active_slots}")
+            return format_digest([
+                ("kv", "dense"), ("peak_active", self.peak_active_slots)])
+        return format_digest([
+            ("kv", "paged"),
+            ("blocks", f"{kv['n_blocks']}x{kv['block_size']}"),
+            ("peak_blocks", kv["peak_used"]),
+            ("defer", kv["deferrals"]),
+            ("preempt", kv["preemptions"]),
+            ("peak_active", self.peak_active_slots)])
 
     def swap_row(self) -> str:
         """Compact adapter swap-in digest (same single-CSV-column
@@ -146,13 +189,14 @@ class ServingSummary:
         sw = self.swap_stats
         if not sw:
             return "swap=n/a"
-        return (f"swap={sw['mode']};"
-                f"load_s={sw['load_seconds_total']:.3f};"
-                f"stall_s={sw['load_stall_seconds']:.3f};"
-                f"overlap_s={sw['overlapped_load_seconds']:.3f};"
-                f"pf={sw['prefetch_hits']}/{sw['prefetch_issued']};"
-                f"waste={sw['prefetch_waste']};"
-                f"cancel={sw['cancelled_loads']}")
+        return format_digest([
+            ("swap", sw["mode"]),
+            ("load_s", fmt_num(sw["load_seconds_total"])),
+            ("stall_s", fmt_num(sw["load_stall_seconds"])),
+            ("overlap_s", fmt_num(sw["overlapped_load_seconds"])),
+            ("pf", f"{sw['prefetch_hits']}/{sw['prefetch_issued']}"),
+            ("waste", sw["prefetch_waste"]),
+            ("cancel", sw["cancelled_loads"])])
 
     def prefix_row(self) -> str:
         """Compact shared-prefix-cache digest (same single-CSV-column
@@ -160,32 +204,34 @@ class ServingSummary:
         ps = self.prefix_stats
         if not ps:
             return "prefix=off"
-        return (f"prefix=on;hits={ps['hit_requests']}/{ps['lookups']};"
-                f"hit_toks={ps['hit_tokens']};"
-                f"saved_toks={ps['saved_prefill_tokens']};"
-                f"cow={ps['cow_copies']};reclaimed={ps['reclaimed_blocks']};"
-                f"cached={ps['cached_blocks']}")
+        return format_digest([
+            ("prefix", "on"),
+            ("hits", f"{ps['hit_requests']}/{ps['lookups']}"),
+            ("hit_toks", ps["hit_tokens"]),
+            ("saved_toks", ps["saved_prefill_tokens"]),
+            ("cow", ps["cow_copies"]),
+            ("reclaimed", ps["reclaimed_blocks"]),
+            ("cached", ps["cached_blocks"])])
 
     def slo_row(self) -> str:
         """Compact SLO/percentile digest (same single-CSV-column
         contract): TTFT/TPOT tails, shed/timeout counts, and per-priority
         deadline attainment ('p0=12/15' = 12 of 15 SLO-carrying
         priority-0 requests met their deadline)."""
-        def _f(v):
-            return "n/a" if v is None or not np.isfinite(v) else f"{v:.3f}"
-        parts = [f"ttft_p99={_f(self.ttft_p99)}",
-                 f"tpot_p99={_f(self.tpot_p99)}",
-                 f"shed={self.shed_requests}",
-                 f"timeout={self.timeout_requests}"]
+        fields = [("ttft_p99", fmt_num(self.ttft_p99)),
+                  ("tpot_p99", fmt_num(self.tpot_p99)),
+                  ("shed", self.shed_requests),
+                  ("timeout", self.timeout_requests)]
         if self.max_step_seconds is not None:
-            parts.append(f"max_step={self.max_step_seconds:.3f}")
+            fields.append(("max_step", fmt_num(self.max_step_seconds)))
         by_prio = (self.slo_stats or {}).get("by_priority", {})
         for prio in sorted(by_prio):
             st = by_prio[prio]
             if st["ttft_eligible"]:
-                parts.append(
-                    f"p{prio}={st['ttft_attained']}/{st['ttft_eligible']}")
-        return ";".join(parts)
+                fields.append((
+                    f"p{prio}",
+                    f"{st['ttft_attained']}/{st['ttft_eligible']}"))
+        return format_digest(fields)
 
 
 def _pct(arr: np.ndarray, q: float) -> float:
@@ -238,13 +284,17 @@ def summarize(requests: List[Request], duration: float,
     """Aggregate a served trace. ``step_stats`` splats extra
     engine-provided fields (step counts, kv/swap/prefix stats, the step
     histogram) straight into the summary; see the field docs above for
-    the exclusion rules (rejected requests never enter latency arrays)."""
+    the exclusion rules (rejected requests never enter latency arrays).
+
+    Zero completions (empty trace, everything rejected, or a truncated
+    run) is an explicit case: every latency aggregate — means,
+    percentiles, and ``slo_attainment`` — is NaN (no evidence, not "all
+    missed"; the old ``[nan]`` sentinel arrays made attainment evaluate
+    ``mean(nan < slo)`` → a coincidental 0.0). Rates stay 0.0."""
     done = [r for r in requests if r.finish_time is not None]
-    lat = np.array([r.finish_time - r.arrival_time for r in done]) \
-        if done else np.array([np.nan])
+    lat = np.array([r.finish_time - r.arrival_time for r in done])
     ftl = np.array([r.first_token_time - r.arrival_time for r in done
-                    if r.first_token_time is not None]) \
-        if done else np.array([np.nan])
+                    if r.first_token_time is not None])
     tpot = np.array([(r.finish_time - r.first_token_time)
                      / (r.generated - 1) for r in done
                      if r.first_token_time is not None and r.generated > 1])
@@ -258,10 +308,11 @@ def summarize(requests: List[Request], duration: float,
         n_completed=len(done),
         duration=duration,
         throughput=len(done) / duration if duration > 0 else 0.0,
-        avg_latency=float(np.mean(lat)),
+        avg_latency=float(np.mean(lat)) if lat.size else float("nan"),
         avg_first_token=float(np.mean(ftl)) if ftl.size else float("nan"),
         p99_first_token=_pct(ftl, 99),
-        slo_attainment=float(np.mean(ftl < slo_seconds)) if ftl.size else 0.0,
+        slo_attainment=(float(np.mean(ftl < slo_seconds))
+                        if ftl.size else float("nan")),
         tokens_per_second=tokens / duration if duration > 0 else 0.0,
         cache_hit_rate=cache_stats.hit_rate if cache_stats else None,
         adapter_loads=cache_stats.loads if cache_stats else None,

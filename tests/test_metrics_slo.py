@@ -8,7 +8,7 @@ TPOT-eligibility rule.
 import math
 
 from repro.core.slots import Request
-from repro.serving.metrics import summarize
+from repro.serving.metrics import fmt_num, format_digest, summarize
 
 
 def _req(rid, arrival=0.0, first=None, finish=None, generated=0,
@@ -91,6 +91,55 @@ def test_per_priority_split():
     assert by[0]["ttft_attained"] == 1 and by[0]["ttft_eligible"] == 1
     assert by[1]["ttft_attained"] == 0 and by[1]["ttft_eligible"] == 1
     assert by[1]["n"] == 2 and by[1]["completed"] == 2
+
+
+def test_empty_run_is_all_nan_not_zero():
+    """An empty trace has no attainment evidence: every latency-shaped
+    aggregate is NaN. (The old ``[nan]`` sentinel arrays made
+    ``slo_attainment`` evaluate ``mean(nan < slo)`` → a coincidental
+    0.0 — 'all SLOs missed' reported for a run that served nothing.)"""
+    s = summarize([], duration=5.0)
+    assert s.n_requests == 0 and s.n_completed == 0
+    for field in ("avg_latency", "avg_first_token", "slo_attainment",
+                  "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99",
+                  "latency_p50", "latency_p99", "p99_first_token"):
+        assert math.isnan(getattr(s, field)), field
+    # rates are genuinely zero events/second, not missing data
+    assert s.throughput == 0.0 and s.tokens_per_second == 0.0
+    # digests must render ("n/a" for the missing data), not crash on NaN
+    assert s.batching_row().startswith("pf_steps=")
+    assert s.slo_row().startswith("ttft_p99=n/a")
+
+
+def test_all_rejected_run_is_nan_with_rejects_counted():
+    reqs = [_req(0, ttft_slo=0.1, rejected="shed"),
+            _req(1, ttft_slo=0.1, rejected="timeout"),
+            _req(2, ttft_slo=0.1, rejected="timeout")]
+    s = summarize(reqs, duration=2.0)
+    assert s.n_completed == 0
+    assert s.shed_requests == 1 and s.timeout_requests == 2
+    assert math.isnan(s.slo_attainment) and math.isnan(s.avg_latency)
+    assert s.throughput == 0.0
+    # per-request SLO accounting still charges the rejects as misses
+    st = s.slo_stats["by_priority"][0]
+    assert st["ttft_eligible"] == 3 and st["ttft_attained"] == 0
+
+
+def test_digest_formatters():
+    assert fmt_num(1.23456) == "1.235"
+    assert fmt_num(1.23456, 1) == "1.2"
+    assert fmt_num(float("nan")) == "n/a"
+    assert fmt_num(float("inf")) == "n/a"
+    assert fmt_num(None) == "n/a"
+    assert fmt_num(0) == "0.000"
+    assert format_digest([("a", "1"), ("b", "x")]) == "a=1;b=x"
+    assert format_digest([]) == ""
+
+
+def test_digest_rows_render_on_normal_run():
+    reqs = [_req(0, arrival=0.0, first=1.0, finish=2.0, generated=2)]
+    s = summarize(reqs, duration=5.0)
+    assert s.slo_row() == "ttft_p99=1.000;tpot_p99=1.000;shed=0;timeout=0"
 
 
 def test_tpot_attainment():

@@ -1,0 +1,95 @@
+"""Validate / re-export engine traces (``serve --trace`` artifacts).
+
+The engine already writes Perfetto-ready JSON; this tool is the
+post-processing side of that pipeline:
+
+    python tools/trace_export.py TRACE.json                # schema check
+    python tools/trace_export.py TRACE.json -o viewer.json --strip-raw
+
+* with no ``-o``: schema-check the file (benchmarks/schema.py contract)
+  and print a one-line summary — CI's bench-smoke job runs exactly this
+  against the traced benchmark artifact.
+* with ``-o``: re-export. ``--strip-raw`` drops the ``edgelora`` raw
+  section (event log, metrics series, breakdowns), leaving a pure
+  Chrome-trace file — typically several times smaller, loads faster in
+  https://ui.perfetto.dev / chrome://tracing; ``--indent`` pretty-prints
+  for eyeballing.
+
+Exit 0 when the input validates, 1 with a violation report otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# runnable from the repo root without installing the package
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.schema import validate_trace_json  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="TRACE_*.json written by serve --trace")
+    ap.add_argument("-o", "--output", default=None,
+                    help="write a (possibly stripped) copy here")
+    ap.add_argument("--strip-raw", action="store_true",
+                    help="drop the 'edgelora' raw section from the "
+                         "output (pure Chrome-trace for the viewer)")
+    ap.add_argument("--indent", type=int, default=None,
+                    help="pretty-print the output with this indent")
+    ap.add_argument("--no-validate", dest="validate",
+                    action="store_false", default=True,
+                    help="skip the schema check (copy/strip only)")
+    args = ap.parse_args(argv)
+
+    path = Path(args.trace)
+    if not path.exists():
+        print(f"{path}: missing", file=sys.stderr)
+        return 1
+    try:
+        data = json.loads(path.read_text())
+    except json.JSONDecodeError as exc:
+        print(f"{path}: invalid JSON ({exc})", file=sys.stderr)
+        return 1
+
+    if args.validate:
+        errors = validate_trace_json(data, name=path.name)
+        for e in errors:
+            print(e, file=sys.stderr)
+        if errors:
+            print(f"# trace_export: {path.name}: {len(errors)} schema "
+                  f"violations", file=sys.stderr)
+            return 1
+
+    section = data.get("edgelora", {}) or {}
+    n_events = len(data.get("traceEvents", []) or [])
+    n_raw = len(section.get("events", []) or [])
+    n_reqs = len(section.get("breakdowns", {}) or {})
+    duration = section.get("duration", float("nan"))
+    wd = section.get("watchdog") or {}
+    print(f"# trace_export: {path.name}: {n_events} traceEvents, "
+          f"{n_raw} raw events, {n_reqs} completed requests, "
+          f"duration={duration:.3f}s, "
+          f"watchdog={'ok' if wd.get('ok') else 'VIOLATIONS'}",
+          file=sys.stderr)
+
+    if args.output:
+        out = dict(data)
+        if args.strip_raw:
+            out.pop("edgelora", None)
+        Path(args.output).write_text(
+            json.dumps(out, indent=args.indent))
+        print(f"# wrote {args.output}"
+              + (" (raw section stripped)" if args.strip_raw else ""),
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
