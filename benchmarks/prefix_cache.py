@@ -89,17 +89,21 @@ def prefill_micro(records: List[Dict], smoke: bool = False) -> None:
             eng.kvpool.append_tokens(i, prompt_len)
         tables = jnp.asarray(np.stack(
             [eng.kvpool.block_table(i, mb) for i in range(b)]))
-        us_cold = time_fn(
-            lambda: eng._prefill(eng.params, eng.lora_pool, toks,
-                                 eng._fresh_cache(b), sids, lengths),
-            iters=iters, reduce="min")
+        def run_cold(eng=eng, toks=toks, sids=sids, lengths=lengths, b=b):
+            return eng._prefill(eng.params, eng.lora_pool, toks,
+                                eng._fresh_cache(b), sids, lengths)
+
+        us_cold = time_fn(run_cold, iters=iters, reduce="min")
         warm = functools.partial(eng._prefill_suffix, prefix_len=prefix_len)
         toks_sfx = toks[:, prefix_len:]
-        us_warm = time_fn(
-            lambda: warm(eng.params, eng.lora_pool, toks_sfx,
-                         eng._fresh_cache(b), eng.cache, tables, sids,
-                         lengths),
-            iters=iters, reduce="min")
+
+        def run_warm(eng=eng, warm=warm, toks_sfx=toks_sfx, tables=tables,
+                     sids=sids, lengths=lengths, b=b):
+            return warm(eng.params, eng.lora_pool, toks_sfx,
+                        eng._fresh_cache(b), eng.cache, tables, sids,
+                        lengths)
+
+        us_warm = time_fn(run_warm, iters=iters, reduce="min")
         speedup = us_cold / max(us_warm, 1e-9)
         emit(f"prefix_cache/prefill_micro/B={b}", us_warm,
              f"bucket={bucket},prefix={prefix_len},us_cold={us_cold:.1f},"

@@ -18,15 +18,15 @@ from __future__ import annotations
 import json
 import math
 from pathlib import Path
-from typing import List
+from typing import Any, List, Union
 
 
-def _is_number(value) -> bool:
+def _is_number(value: Any) -> bool:
     return isinstance(value, (int, float)) and not isinstance(value, bool)
 
 
 def _bad_floats(record: dict) -> List[str]:
-    bad = []
+    bad: List[str] = []
     for key, value in record.items():
         leaves = value.items() if isinstance(value, dict) else [(None, value)]
         for sub, leaf in leaves:
@@ -36,7 +36,7 @@ def _bad_floats(record: dict) -> List[str]:
     return bad
 
 
-def validate_bench_records(records, name: str = "<records>") -> List[str]:
+def validate_bench_records(records: Any, name: str = "<records>") -> List[str]:
     """Return a list of schema violations (empty == valid)."""
     if not isinstance(records, list):
         got = type(records).__name__
@@ -59,7 +59,7 @@ def validate_bench_records(records, name: str = "<records>") -> List[str]:
     return errors
 
 
-def validate_bench_file(path) -> List[str]:
+def validate_bench_file(path: Union[str, Path]) -> List[str]:
     """Schema-check one ``BENCH_*.json``; returns violations."""
     path = Path(path)
     if not path.exists():
@@ -84,7 +84,7 @@ _TRACE_SEGMENTS = (
 )
 
 
-def _check_chrome_events(events, name: str) -> List[str]:
+def _check_chrome_events(events: Any, name: str) -> List[str]:
     errors: List[str] = []
     if not isinstance(events, list) or not events:
         return [f"{name}: traceEvents missing or empty"]
@@ -109,7 +109,7 @@ def _check_chrome_events(events, name: str) -> List[str]:
     return errors
 
 
-def _check_trace_section(section, name: str) -> List[str]:
+def _check_trace_section(section: Any, name: str) -> List[str]:
     errors: List[str] = []
     where = f"{name}.edgelora"
     if not isinstance(section, dict):
@@ -168,7 +168,7 @@ def _check_trace_section(section, name: str) -> List[str]:
     return errors
 
 
-def validate_trace_json(data, name: str = "<trace>") -> List[str]:
+def validate_trace_json(data: Any, name: str = "<trace>") -> List[str]:
     """Schema-check one exported engine trace (already-parsed JSON).
 
     Contract (see docs/observability.md): a Chrome-trace object with a
@@ -186,7 +186,7 @@ def validate_trace_json(data, name: str = "<trace>") -> List[str]:
     return errors
 
 
-def validate_trace_file(path) -> List[str]:
+def validate_trace_file(path: Union[str, Path]) -> List[str]:
     """Schema-check one ``TRACE_*.json``; returns violations."""
     path = Path(path)
     if not path.exists():

@@ -27,7 +27,7 @@ def main() -> None:
     for slot in range(4):
         adapter = model.init_lora(jax.random.PRNGKey(100 + slot))
         adapter = jax.tree.map(  # give each adapter a distinct signature
-            lambda x: x + 0.01 * (slot + 1), adapter)
+            lambda x, slot=slot: x + 0.01 * (slot + 1), adapter)
         pool = {k: load_adapter_into_slot(pool[k], adapter[k], slot)
                 for k in pool}
     print("adapter pool loaded: 4 slots")

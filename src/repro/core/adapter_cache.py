@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, Iterator, List, Optional
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional
 
 
 @dataclass
@@ -104,7 +104,7 @@ class AdapterMemoryManager:
 
     def __init__(self, max_resident: int,
                  load_fn: Optional[Callable[[int, int], None]] = None,
-                 policy: str = "lru", load_seconds: float = 0.0):
+                 policy: str = "lru", load_seconds: float = 0.0) -> None:
         assert policy in ("lru", "lfu")
         self.max_resident = max_resident
         self.policy = policy
@@ -129,7 +129,7 @@ class AdapterMemoryManager:
         # serve(); None (default) costs one condition per event site
         self.on_event: Optional[Callable[[str, float, Dict], None]] = None
 
-    def _event(self, name: str, now: float, **args) -> None:
+    def _event(self, name: str, now: float, **args: Any) -> None:
         if self.on_event is not None:
             self.on_event(name, now, args)
 

@@ -72,7 +72,8 @@ def resolve_lora_exec(requested: str = "auto") -> Tuple[str, bool]:
 
 
 def init_lora_pair(rng: jax.Array, d_in: int, d_out: int, rank: int,
-                   *, stack: Tuple[int, ...] = (), dtype=jnp.float32,
+                   *, stack: Tuple[int, ...] = (),
+                   dtype: Any = jnp.float32,
                    ) -> Dict[str, jax.Array]:
     """A (A, B) pair, optionally stacked over leading dims (layers, slots).
 
@@ -186,7 +187,7 @@ def load_adapter_into_slot(stack_tree: Any, adapter_tree: Any,
     pool-block write of the heterogeneous memory manager: fixed-size,
     allocation-free, jit-able (donate the stack for true in-place update).
     """
-    def _upd(stack, item):
+    def _upd(stack: jax.Array, item: jax.Array) -> jax.Array:
         return jax.lax.dynamic_update_index_in_dim(
             stack, item.astype(stack.dtype), slot, axis=0)
     return jax.tree.map(_upd, stack_tree, adapter_tree)

@@ -17,12 +17,14 @@ Two implementations:
 """
 from __future__ import annotations
 
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.adapter_cache import AdapterMemoryManager
+from repro.core.slots import Request
 
 
 def select_adapter(scores: np.ndarray, manager: AdapterMemoryManager,
@@ -50,12 +52,13 @@ class OracleRouter:
     selections and the stream-parity regression suites couldn't hold.
     """
 
-    def __init__(self, n_adapters: int, accuracy: float = 0.95, seed: int = 0):
+    def __init__(self, n_adapters: int, accuracy: float = 0.95,
+                 seed: int = 0) -> None:
         self.n_adapters = n_adapters
         self.accuracy = accuracy
         self.seed = seed
 
-    def scores(self, request) -> np.ndarray:
+    def scores(self, request: Request) -> np.ndarray:
         rng = np.random.default_rng([self.seed, request.request_id])
         s = rng.uniform(0.0, 0.5, self.n_adapters)
         true = request.true_adapter if request.true_adapter is not None else 0
@@ -81,12 +84,13 @@ class LearnedRouter:
 
     costs_forward = True
 
-    def __init__(self, model, params, head, jit: bool = True):
+    def __init__(self, model: Any, params: Any, head: Any,
+                 jit: bool = True) -> None:
         self.model = model
         self.params = params
         self.head = head
 
-        def _score(params, head, tokens):
+        def _score(params: Any, head: Any, tokens: jax.Array) -> jax.Array:
             from repro.models import transformer
             from repro.models.layers import rmsnorm
             x = model.embed(params, tokens)
@@ -103,6 +107,6 @@ class LearnedRouter:
         """tokens: [B, S] -> [B, n_adapters] sigmoid suitabilities."""
         return np.asarray(self._score(self.params, self.head, tokens))
 
-    def scores(self, request) -> np.ndarray:
+    def scores(self, request: Request) -> np.ndarray:
         toks = jnp.asarray(request.prompt_tokens)[None, :]
         return self.scores_batch(toks)[0]

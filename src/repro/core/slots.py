@@ -143,7 +143,7 @@ class Slot:
 
 
 class SlotManager:
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int) -> None:
         self.slots = [Slot(i) for i in range(n_slots)]
 
     def idle(self) -> List[Slot]:

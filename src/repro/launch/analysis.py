@@ -263,7 +263,7 @@ def parse_hlo_collectives(hlo_text: str) -> Dict[str, float]:
     comps = _split_computations(hlo_text)
     # map body computation -> trip count (max int constant in the cond)
     trips: Dict[str, float] = {}
-    for name, body in comps.items():
+    for _name, body in comps.items():
         for m in _WHILE_RE.finditer(body):
             cond_name, body_name = m.group(1), m.group(2)
             cond_text = comps.get(cond_name, "")
@@ -274,7 +274,7 @@ def parse_hlo_collectives(hlo_text: str) -> Dict[str, float]:
     # call/fusion; approximate by assigning multiplier 1 to non-bodies.
     total = {c: 0.0 for c in _COLLECTIVES}
     count = 0.0
-    for name, body in comps.items():
+    for _name, body in comps.items():
         mult = trips.get(name, 1.0)
         sub = _line_collective_bytes(body)
         for c in _COLLECTIVES:

@@ -301,7 +301,7 @@ def _arg_bytes_per_device(kwargs, mesh) -> float:
         size = float(np.prod(leaf.shape)) * leaf.dtype.itemsize
         if sharding is not None and hasattr(sharding, "spec"):
             shards = 1
-            for axis_entry, dim in zip(
+            for axis_entry, _dim in zip(
                     tuple(sharding.spec) + (None,) * 10, leaf.shape):
                 if axis_entry is None:
                     continue

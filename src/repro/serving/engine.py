@@ -104,7 +104,7 @@ import heapq
 import math
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -233,8 +233,8 @@ class EngineConfig:
 
 class EdgeLoRAEngine:
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
-                 router=None, params=None,
-                 tracer: Optional[EngineTracer] = None):
+                 router: Any = None, params: Any = None,
+                 tracer: Optional[EngineTracer] = None) -> None:
         self.cfg = cfg
         self.ecfg = engine_cfg
         # opt-in observability (serving/trace.py): every instrumentation
@@ -296,7 +296,7 @@ class EdgeLoRAEngine:
     _LEAD_AXIS = {"layers": 1, "shared_attn": 0, "encoder": 1,
                   "decoder": 1, "cross": 1}
 
-    def _adapter_host(self, adapter_id: int):
+    def _adapter_host(self, adapter_id: int) -> Any:
         """'Disk' fetch: adapters are deterministic functions of their id
         (stand-in for real checkpoint files; same bytes, same latency)."""
         return self.model.init_lora(jax.random.PRNGKey(10_000 + adapter_id))
@@ -311,7 +311,7 @@ class EdgeLoRAEngine:
         for key, sub in self.lora_pool.items():
             ax = self._LEAD_AXIS[key]
             new_pool[key] = jax.tree.map(
-                lambda p, a: jax.lax.dynamic_update_index_in_dim(
+                lambda p, a, ax=ax: jax.lax.dynamic_update_index_in_dim(
                     p, a.astype(p.dtype), slot, axis=ax), sub, adapter[key])
         self.lora_pool = new_pool
 
@@ -319,26 +319,28 @@ class EdgeLoRAEngine:
     # jit'd compute steps
     # ------------------------------------------------------------------
 
-    def _build_steps(self):
+    def _build_steps(self) -> None:
         model, cfg = self.model, self.cfg
         scale = cfg.lora.scale
         backend, interpret = self.lora_backend, self._sgmv_interpret
         self.prefix_enabled = False
-        self.prefix_cache = None
+        self.prefix_cache: Optional[PrefixCache] = None
         chunk = self.ecfg.prefill_chunk
         if chunk is not None and chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1 (or None to "
                              f"disable), got {chunk}")
         self.chunked = chunk is not None
 
-        def prefill_fn(params, pool, tokens, cache1, slot_id, length):
+        def prefill_fn(params: Any, pool: Any, tokens: Any, cache1: Any,
+                       slot_id: Any, length: Any) -> Any:
             mode = LoRAMode("batched", slot_id, scale, backend, interpret)
             logits, cache1 = model.prefill(params, {"tokens": tokens},
                                            cache1, pool, mode,
                                            lengths=length)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache1
 
-        def decode_fn(params, pool, tokens, cache, pos, slot_ids):
+        def decode_fn(params: Any, pool: Any, tokens: Any, cache: Any,
+                      pos: Any, slot_ids: Any) -> Any:
             mode = LoRAMode("batched", slot_ids, scale, backend, interpret)
             logits, cache = model.decode_step(params, tokens, cache, pos,
                                               pool, mode)
@@ -346,12 +348,14 @@ class EdgeLoRAEngine:
 
         # merged-execution variants (dlora policy): the adapter lives
         # folded into W, so the step skips LoRA math entirely
-        def prefill_merged(params, tokens, cache1, length):
+        def prefill_merged(params: Any, tokens: Any, cache1: Any,
+                           length: Any) -> Any:
             logits, cache1 = model.prefill(params, {"tokens": tokens},
                                            cache1, lengths=length)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache1
 
-        def decode_merged(params, tokens, cache, pos):
+        def decode_merged(params: Any, tokens: Any, cache: Any,
+                          pos: Any) -> Any:
             logits, cache = model.decode_step(params, tokens, cache, pos)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
@@ -362,7 +366,7 @@ class EdgeLoRAEngine:
         self._prefill_merged = jax.jit(prefill_merged)
         self._decode_merged = jax.jit(decode_merged)
 
-        def write_slots(gcache, bcache, slot_idx):
+        def write_slots(gcache: Any, bcache: Any, slot_idx: Any) -> Any:
             # every cache leaf carries batch at axis 1 (stack/group dim
             # leading); one scatter lands all B fresh KV slices at their
             # slot indices — duplicate indices (power-of-two padding rows
@@ -391,23 +395,29 @@ class EdgeLoRAEngine:
                 raise ValueError(
                     f"prefill_chunk unsupported for {cfg.name}: {reason}")
 
-            def prefill_sfx_dense_fn(params, pool, tokens, cache1, gcache,
-                                     slot_idx, sids, length, *, prefix_len):
+            def prefill_sfx_dense_fn(params: Any, pool: Any, tokens: Any,
+                                     cache1: Any, gcache: Any, slot_idx: Any,
+                                     sids: Any, length: Any, *,
+                                     prefix_len: Any) -> Any:
                 mode = LoRAMode("batched", sids, scale, backend, interpret)
                 logits, cache1 = model.prefill_suffix_dense(
                     params, tokens, cache1, gcache, slot_idx, length,
                     prefix_len, pool, mode)
                 return jnp.argmax(logits, -1).astype(jnp.int32), cache1
 
-            def prefill_sfx_dense_merged_fn(params, tokens, cache1, gcache,
-                                            slot_idx, length, *, prefix_len):
+            def prefill_sfx_dense_merged_fn(params: Any, tokens: Any,
+                                            cache1: Any, gcache: Any,
+                                            slot_idx: Any, length: Any, *,
+                                            prefix_len: Any) -> Any:
                 logits, cache1 = model.prefill_suffix_dense(
                     params, tokens, cache1, gcache, slot_idx, length,
                     prefix_len)
                 return jnp.argmax(logits, -1).astype(jnp.int32), cache1
 
-            def dense_scatter_suffix_fn(gcache, bcache, slot_idx, lengths,
-                                        *, prefix_len, suffix_len):
+            def dense_scatter_suffix_fn(gcache: Any, bcache: Any,
+                                        slot_idx: Any, lengths: Any, *,
+                                        prefix_len: Any,
+                                        suffix_len: Any) -> Any:
                 # land mini-ring positions [prefix_len, prefix_len+sfx)
                 # into the global per-slot rings (ring index == position
                 # — chunking is gated to full-length rings). K/V copy
@@ -423,7 +433,7 @@ class EdgeLoRAEngine:
                                   positions[None, :], -1)     # [B, sfx]
                 sl = slice(prefix_len, prefix_len + suffix_len)
 
-                def walk(gnode, bnode):
+                def walk(gnode: Any, bnode: Any) -> Any:
                     if isinstance(gnode, dict) and "k" in gnode \
                             and "pos" in gnode:
                         new = {}
@@ -474,8 +484,9 @@ class EdgeLoRAEngine:
                 paged_gather, interpret=jax.default_backend() != "tpu",
                 use_kernel=True)
 
-        def paged_decode_fn(params, pool, tokens, cache, tables, lengths,
-                            prompt_lens, pad_lens, pos, slot_ids):
+        def paged_decode_fn(params: Any, pool: Any, tokens: Any, cache: Any,
+                            tables: Any, lengths: Any, prompt_lens: Any,
+                            pad_lens: Any, pos: Any, slot_ids: Any) -> Any:
             mode = LoRAMode("batched", slot_ids, scale, backend, interpret)
             logits, cache = model.decode_step_paged(
                 params, tokens, cache, tables, lengths, prompt_lens,
@@ -483,16 +494,17 @@ class EdgeLoRAEngine:
                 meta=meta, page_gather=page_gather)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-        def paged_decode_merged(params, tokens, cache, tables, lengths,
-                                prompt_lens, pad_lens, pos):
+        def paged_decode_merged(params: Any, tokens: Any, cache: Any,
+                                tables: Any, lengths: Any, prompt_lens: Any,
+                                pad_lens: Any, pos: Any) -> Any:
             logits, cache = model.decode_step_paged(
                 params, tokens, cache, tables, lengths, prompt_lens,
                 pad_lens, pos,
                 meta=meta, page_gather=page_gather)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
-        def paged_write(gcache, bcache, tables, lengths, pad_lens,
-                        slot_idx):
+        def paged_write(gcache: Any, bcache: Any, tables: Any, lengths: Any,
+                        pad_lens: Any, slot_idx: Any) -> Any:
             # the paged analogue of write_slots: attention leaves land in
             # their sequences' pages, per-slot leaves (SSM state) keep
             # the dense slot scatter
@@ -522,27 +534,31 @@ class EdgeLoRAEngine:
             # refcount-change hook)
             self.prefix_cache = PrefixCache(self.kvpool, bs)
 
-        def prefill_suffix_fn(params, pool, tokens, cache1, arena, tables,
-                              slot_id, length, *, prefix_len):
+        def prefill_suffix_fn(params: Any, pool: Any, tokens: Any,
+                              cache1: Any, arena: Any, tables: Any,
+                              slot_id: Any, length: Any, *,
+                              prefix_len: Any) -> Any:
             mode = LoRAMode("batched", slot_id, scale, backend, interpret)
             logits, cache1 = model.prefill_suffix(
                 params, tokens, cache1, arena, tables, length, prefix_len,
                 pool, mode, meta=meta)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache1
 
-        def prefill_suffix_merged_fn(params, tokens, cache1, arena, tables,
-                                     length, *, prefix_len):
+        def prefill_suffix_merged_fn(params: Any, tokens: Any, cache1: Any,
+                                     arena: Any, tables: Any, length: Any, *,
+                                     prefix_len: Any) -> Any:
             logits, cache1 = model.prefill_suffix(
                 params, tokens, cache1, arena, tables, length, prefix_len,
                 meta=meta)
             return jnp.argmax(logits, -1).astype(jnp.int32), cache1
 
-        def scatter_suffix_fn(arena, mini, tables, lengths, *,
-                              prefix_len, suffix_len):
+        def scatter_suffix_fn(arena: Any, mini: Any, tables: Any,
+                              lengths: Any, *, prefix_len: Any,
+                              suffix_len: Any) -> Any:
             return kvlib.scatter_suffix(arena, mini, tables, lengths,
                                         prefix_len, suffix_len, meta)
 
-        def copy_block_fn(arena, src, dst):
+        def copy_block_fn(arena: Any, src: Any, dst: Any) -> Any:
             return kvlib.copy_block(arena, src, dst, meta)
 
         self._prefill_suffix = jax.jit(prefill_suffix_fn,
@@ -553,7 +569,7 @@ class EdgeLoRAEngine:
             scatter_suffix_fn, static_argnames=("prefix_len", "suffix_len"))
         self._copy_block = jax.jit(copy_block_fn)
 
-    def _fresh_cache(self, batch: int):
+    def _fresh_cache(self, batch: int) -> Any:
         """Zeroed prefill cache for one batch group (no persistent
         per-shape templates: a template would be copied per call anyway,
         so caching it only retains dead memory)."""
@@ -592,7 +608,10 @@ class EdgeLoRAEngine:
         padded = min(1 << (k - 1).bit_length(), self.ecfg.n_slots)
         return group + [group[0]] * (padded - k)
 
-    def _timed(self, key, fn, *args, now=None, requests=None):
+    def _timed(self, key: Tuple, fn: Callable, *args: Any,
+               now: Optional[float] = None,
+               requests: Optional[List[Request]] = None
+               ) -> Tuple[Any, float]:
         """Run fn; charge its measured duration (first call per key warms
         the jit cache and is *not* charged). With a tracer attached and
         ``now`` given, the charge lands on the trace as a compute span
@@ -603,16 +622,17 @@ class EdgeLoRAEngine:
         if warm:
             out = fn(*args)  # compile + run (warmup, uncharged)
             jax.block_until_ready(out)
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()  # el: allow[clock] -- _timed measures
             out = fn(*args)
             jax.block_until_ready(out)
-            self._durations[key] = (time.perf_counter() - t0)
+            self._durations[key] = (
+                time.perf_counter() - t0)  # el: allow[clock] -- _timed
         else:
-            t0 = time.perf_counter()
+            t0 = time.perf_counter()  # el: allow[clock] -- _timed measures
             out = fn(*args)
             jax.block_until_ready(out)
             self._durations[key] = 0.5 * self._durations[key] + 0.5 * (
-                time.perf_counter() - t0)
+                time.perf_counter() - t0)  # el: allow[clock] -- _timed
         dt = self._durations[key] * self.ecfg.time_scale
         self.busy_time += dt
         tr = self.tracer
@@ -679,459 +699,466 @@ class EdgeLoRAEngine:
         self.manager.reset_channel()
         # tracing (opt-in): open the run, then wire the channel/arena
         # event hooks onto the manager and pool for the duration of this
-        # serve — the hooks are read-only observers, unhooked at the end
+        # serve — the hooks are read-only observers, unwired in the
+        # finally below even when the loop raises mid-run
         tr = self.tracer
-        if tr is not None:
-            tr.begin(now, ecfg.n_slots, meta={
-                "policy": ecfg.policy, "kv_backend": self.kv_backend,
-                "lora_backend": self.lora_backend,
-                "async_swap": ecfg.async_swap,
-                "prefill_chunk": ecfg.prefill_chunk,
-                "prefix_cache": self.prefix_enabled,
-                "buckets": list(self._buckets),
-                "n_requests": len(queue)})
-            self.manager.on_event = tr.channel_hook
-            if self.paged:
-                self.kvpool.on_event = tr.arena_hook
-        active_adapter: Optional[int] = None  # llamacpp single-active mode
-        dlora_mode = "unmerged"               # dlora dynamic mode
-        dlora_merged_adapter: Optional[int] = None
-
-        def dlora_desired():
-            """Look ahead over the next window of pending requests: merge
-            when the queue is dominated by few adapters (dLoRA §3).
-            Requeued (KV-preempted) work re-admits first, so it leads the
-            window — otherwise a drained queue could leave merged mode
-            folded on an adapter the requeue can never match."""
-            ahead = [r.true_adapter for r in
-                     self._upcoming(ecfg.dlora_window)]
-            if not ahead:
-                return dlora_mode, dlora_merged_adapter
-            uniq = set(ahead)
-            # merge on the HEAD's adapter only (FIFO stays serviceable)
-            if len(uniq) <= ecfg.dlora_merge_uniques \
-                    and ahead.count(ahead[0]) * 2 >= len(ahead):
-                return "merged", ahead[0]
-            return "unmerged", None
-
-        def arrivals_ready():
-            self._ingest(now)
-            return bool(self._ready)
-
-        while len(completed) + len(rejected) < len(queue):
-            if max_sim_time is not None and now > max_sim_time:
-                break
-            progressed = False
-            busy0 = self.busy_time
-
-            # ---- admission -------------------------------------------
-            idle = self.slots.idle()
-            if ecfg.policy == "dlora" and idle and arrivals_ready():
-                want_mode, want_adapter = dlora_desired()
-                if (want_mode, want_adapter) != (dlora_mode,
-                                                 dlora_merged_adapter):
-                    if self.slots.any_active:
-                        idle = []  # drain before switching modes
-                    else:
-                        # unmerge old and/or merge new: weight-sized traffic
-                        cost = 0.0
-                        if dlora_merged_adapter is not None:
-                            cost += 2 * self.adapter_bytes / ecfg.mem_bandwidth
-                        if want_adapter is not None:
-                            cost += 2 * self.adapter_bytes / ecfg.mem_bandwidth
-                        now += cost
-                        dlora_mode, dlora_merged_adapter = (want_mode,
-                                                            want_adapter)
-                        if tr is not None:
-                            tr.sched(now, "merge_switch", mode=want_mode,
-                                     adapter=want_adapter, cost=cost)
-            while idle and arrivals_ready():
-                req = self._ready[0][3]
-                if ecfg.admission_control and req.ttft_slo is not None \
-                        and self._reject_expired(req, now, rejected):
-                    progressed = True
-                    continue  # next heap head (rejection IS progress)
-                if ecfg.policy == "dlora" and dlora_mode == "merged" \
-                        and req.true_adapter != dlora_merged_adapter:
-                    break  # merged mode serves only the folded adapter
-                if self.paged and not self.kvpool.can_allocate(
-                        req.prompt_len + 1):
-                    # KV arena exhausted: OutOfBlocks feeds the same
-                    # deferral discipline as adapter-pool exhaustion —
-                    # leave the request queued and retry once a
-                    # completion (or preemption) frees pages. Checked
-                    # *before* any merge-cost accounting so a deferred
-                    # admission charges nothing. +1: the first decode
-                    # write must never OOM right after admission.
-                    self.kv_deferrals += 1
-                    if tr is not None:
-                        tr.sched(now, "defer_kv", request=req)
-                    break
-                if ecfg.policy == "llamacpp":
-                    want = req.true_adapter
-                    if active_adapter is None:
-                        active_adapter = want
-                        # merge the adapter into the base weights
-                        now += 2 * self.adapter_bytes / ecfg.mem_bandwidth
-                        if tr is not None:
-                            tr.sched(now, "merge_switch", adapter=want)
-                    if want != active_adapter:
-                        if self.slots.any_active:
-                            break  # must drain before switching adapters
-                        # unmerge old + merge new
-                        now += 4 * self.adapter_bytes / ecfg.mem_bandwidth
-                        active_adapter = want
-                        if tr is not None:
-                            tr.sched(now, "merge_switch", adapter=want)
-                heapq.heappop(self._ready)
-                slot = idle.pop()
-                slot.assign(req)
-                req.admit_time = now
-                slot.admit_seq = self._admit_counter
-                self._admit_counter += 1
-                if tr is not None:
-                    tr.sched(now, "admit", request=req, slot=slot.index)
-                    tr.transition(now, slot.index, "idle", "selecting",
-                                  req)
+        try:
+            if tr is not None:
+                tr.begin(now, ecfg.n_slots, meta={
+                    "policy": ecfg.policy, "kv_backend": self.kv_backend,
+                    "lora_backend": self.lora_backend,
+                    "async_swap": ecfg.async_swap,
+                    "prefill_chunk": ecfg.prefill_chunk,
+                    "prefix_cache": self.prefix_enabled,
+                    "buckets": list(self._buckets),
+                    "n_requests": len(queue)})
+                self.manager.on_event = tr.channel_hook
                 if self.paged:
-                    self.kvpool.register(req.request_id)
-                    key = (self._admission_exec_key(req, dlora_mode)
-                           if self.prefix_enabled else None)
-                    if key is not None:
-                        # execution identity known at admission: splice
-                        # cached prefix pages now and allocate only the
-                        # suffix (the +1 gate headroom covers the COW
-                        # page, so this cannot OOM)
-                        slot.prefix_len = self._admit_prefix(req, key)
-                    else:
-                        # AAS-routed request: adapter unknown until
-                        # selection — reserve the full prompt and swap
-                        # in shared pages at SELECTING→PREFILL
-                        self.kvpool.append_tokens(req.request_id,
-                                                  req.prompt_len)
-                progressed = True
-            self.peak_active_slots = max(
-                self.peak_active_slots,
-                sum(s.state != SlotState.IDLE for s in self.slots.slots))
+                    self.kvpool.on_event = tr.arena_hook
+            active_adapter: Optional[int] = None  # llamacpp single-active mode
+            dlora_mode = "unmerged"               # dlora dynamic mode
+            dlora_merged_adapter: Optional[int] = None
 
-            # ---- adapter selection (Algorithm 1) ---------------------
-            # batched router scoring: every SELECTING slot that needs a
-            # learned-router forward is scored in one scores_batch call
-            # per prompt bucket (same gather→batch trick as prefill);
-            # scores land in slot.sel_scores exactly as the solo path
-            # caches them, so pool-exhausted deferral semantics below are
-            # unchanged
-            if (ecfg.router_batching
-                    and ecfg.policy not in ("dlora", "llamacpp",
-                                            "edgelora_no_aas")
-                    and getattr(self.router, "costs_forward", False)):
-                unscored = [
-                    s for s in self.slots.in_state(SlotState.SELECTING)
-                    if s.sel_scores is None and s.request.adapter_id is None]
-                score_groups: Dict[int, List[Slot]] = {}
-                for slot in unscored:
-                    self._slot_prompt(slot)
-                    score_groups.setdefault(slot.bucket, []).append(slot)
-                for b, group in score_groups.items():
-                    rows = self._pad_group(group)
-                    toks = jnp.stack([s.padded_prompt for s in rows])
-                    rids = ([s.request.request_id for s in group]
-                            if tr is not None else None)
-                    sb, dt = self._timed(("router", b, len(rows)),
-                                         self.router.scores_batch, toks,
-                                         now=now, requests=rids)
-                    now += dt
-                    self.router_steps += 1
-                    sb = np.asarray(sb)
-                    for i, slot in enumerate(group):
-                        slot.sel_scores = sb[i]
-            for slot in self.slots.in_state(SlotState.SELECTING):
-                req = slot.request
-                if ecfg.policy == "dlora":
-                    req.selected_adapter = req.true_adapter
-                    slot.merged = dlora_mode == "merged"
-                    if not slot.merged:
+            def dlora_desired() -> Optional[int]:
+                """Look ahead over the next window of pending requests: merge
+                when the queue is dominated by few adapters (dLoRA §3).
+                Requeued (KV-preempted) work re-admits first, so it leads the
+                window — otherwise a drained queue could leave merged mode
+                folded on an adapter the requeue can never match."""
+                ahead = [r.true_adapter for r in
+                         self._upcoming(ecfg.dlora_window)]
+                if not ahead:
+                    return dlora_mode, dlora_merged_adapter
+                uniq = set(ahead)
+                # merge on the HEAD's adapter only (FIFO stays serviceable)
+                if len(uniq) <= ecfg.dlora_merge_uniques \
+                        and ahead.count(ahead[0]) * 2 >= len(ahead):
+                    return "merged", ahead[0]
+                return "unmerged", None
+
+            def arrivals_ready() -> bool:
+                self._ingest(now)
+                return bool(self._ready)
+
+            while len(completed) + len(rejected) < len(queue):
+                if max_sim_time is not None and now > max_sim_time:
+                    break
+                progressed = False
+                busy0 = self.busy_time
+
+                # ---- admission -------------------------------------------
+                idle = self.slots.idle()
+                if ecfg.policy == "dlora" and idle and arrivals_ready():
+                    want_mode, want_adapter = dlora_desired()
+                    if (want_mode, want_adapter) != (dlora_mode,
+                                                     dlora_merged_adapter):
+                        if self.slots.any_active:
+                            idle = []  # drain before switching modes
+                        else:
+                            # unmerge old and/or merge new: weight-sized traffic
+                            cost = 0.0
+                            if dlora_merged_adapter is not None:
+                                cost += 2 * self.adapter_bytes / ecfg.mem_bandwidth
+                            if want_adapter is not None:
+                                cost += 2 * self.adapter_bytes / ecfg.mem_bandwidth
+                            now += cost
+                            dlora_mode, dlora_merged_adapter = (want_mode,
+                                                                want_adapter)
+                            if tr is not None:
+                                tr.sched(now, "merge_switch", mode=want_mode,
+                                         adapter=want_adapter, cost=cost)
+                while idle and arrivals_ready():
+                    req = self._ready[0][3]
+                    if ecfg.admission_control and req.ttft_slo is not None \
+                            and self._reject_expired(req, now, rejected):
+                        progressed = True
+                        continue  # next heap head (rejection IS progress)
+                    if ecfg.policy == "dlora" and dlora_mode == "merged" \
+                            and req.true_adapter != dlora_merged_adapter:
+                        break  # merged mode serves only the folded adapter
+                    if self.paged and not self.kvpool.can_allocate(
+                            req.prompt_len + 1):
+                        # KV arena exhausted: OutOfBlocks feeds the same
+                        # deferral discipline as adapter-pool exhaustion —
+                        # leave the request queued and retry once a
+                        # completion (or preemption) frees pages. Checked
+                        # *before* any merge-cost accounting so a deferred
+                        # admission charges nothing. +1: the first decode
+                        # write must never OOM right after admission.
+                        self.kv_deferrals += 1
+                        if tr is not None:
+                            tr.sched(now, "defer_kv", request=req)
+                        break
+                    if ecfg.policy == "llamacpp":
+                        want = req.true_adapter
+                        if active_adapter is None:
+                            active_adapter = want
+                            # merge the adapter into the base weights
+                            now += 2 * self.adapter_bytes / ecfg.mem_bandwidth
+                            if tr is not None:
+                                tr.sched(now, "merge_switch", adapter=want)
+                        if want != active_adapter:
+                            if self.slots.any_active:
+                                break  # must drain before switching adapters
+                            # unmerge old + merge new
+                            now += 4 * self.adapter_bytes / ecfg.mem_bandwidth
+                            active_adapter = want
+                            if tr is not None:
+                                tr.sched(now, "merge_switch", adapter=want)
+                    heapq.heappop(self._ready)
+                    slot = idle.pop()
+                    slot.assign(req)
+                    req.admit_time = now
+                    slot.admit_seq = self._admit_counter
+                    self._admit_counter += 1
+                    if tr is not None:
+                        tr.sched(now, "admit", request=req, slot=slot.index)
+                        tr.transition(now, slot.index, "idle", "selecting",
+                                      req)
+                    if self.paged:
+                        self.kvpool.register(req.request_id)
+                        key = (self._admission_exec_key(req, dlora_mode)
+                               if self.prefix_enabled else None)
+                        if key is not None:
+                            # execution identity known at admission: splice
+                            # cached prefix pages now and allocate only the
+                            # suffix (the +1 gate headroom covers the COW
+                            # page, so this cannot OOM)
+                            slot.prefix_len = self._admit_prefix(req, key)
+                        else:
+                            # AAS-routed request: adapter unknown until
+                            # selection — reserve the full prompt and swap
+                            # in shared pages at SELECTING→PREFILL
+                            self.kvpool.append_tokens(req.request_id,
+                                                      req.prompt_len)
+                    progressed = True
+                self.peak_active_slots = max(
+                    self.peak_active_slots,
+                    sum(s.state != SlotState.IDLE for s in self.slots.slots))
+
+                # ---- adapter selection (Algorithm 1) ---------------------
+                # batched router scoring: every SELECTING slot that needs a
+                # learned-router forward is scored in one scores_batch call
+                # per prompt bucket (same gather→batch trick as prefill);
+                # scores land in slot.sel_scores exactly as the solo path
+                # caches them, so pool-exhausted deferral semantics below are
+                # unchanged
+                if (ecfg.router_batching
+                        and ecfg.policy not in ("dlora", "llamacpp",
+                                                "edgelora_no_aas")
+                        and getattr(self.router, "costs_forward", False)):
+                    unscored = [
+                        s for s in self.slots.in_state(SlotState.SELECTING)
+                        if s.sel_scores is None and s.request.adapter_id is None]
+                    score_groups: Dict[int, List[Slot]] = {}
+                    for slot in unscored:
+                        self._slot_prompt(slot)
+                        score_groups.setdefault(slot.bucket, []).append(slot)
+                    for b, group in score_groups.items():
+                        rows = self._pad_group(group)
+                        toks = jnp.stack([s.padded_prompt for s in rows])
+                        rids = ([s.request.request_id for s in group]
+                                if tr is not None else None)
+                        sb, dt = self._timed(("router", b, len(rows)),
+                                             self.router.scores_batch, toks,
+                                             now=now, requests=rids)
+                        now += dt
+                        self.router_steps += 1
+                        sb = np.asarray(sb)  # el: allow[host-sync] -- host argmax
+                        for i, slot in enumerate(group):
+                            slot.sel_scores = sb[i]
+                for slot in self.slots.in_state(SlotState.SELECTING):
+                    req = slot.request
+                    if ecfg.policy == "dlora":
+                        req.selected_adapter = req.true_adapter
+                        slot.merged = dlora_mode == "merged"
+                        if not slot.merged:
+                            try:
+                                res = self.manager.acquire(
+                                    req.selected_adapter, now=now)
+                            except PoolExhaustedError:
+                                if tr is not None:
+                                    tr.sched(now, "defer_pool", request=req)
+                                continue  # pool fully pinned: defer (see below)
+                            now = self._finish_acquire(slot, res, now)
+                        else:
+                            slot.adapter_slot = 0
+                            slot.state = SlotState.PREFILL
+                            if tr is not None:
+                                tr.transition(now, slot.index, "selecting",
+                                              "prefill", req)
+                        progressed = True
+                        continue
+                    slot.merged = False
+                    if ecfg.policy == "llamacpp":
+                        # baseline executes MERGED: the active adapter was
+                        # folded into W at admission (cost charged there), so
+                        # steps must skip LoRA math entirely — running the
+                        # batched path with adapter_slot=0 would silently
+                        # apply whatever adapter sits in pool slot 0
+                        req.selected_adapter = req.true_adapter
+                        slot.merged = True
+                    elif ecfg.policy == "edgelora_no_aas" or req.adapter_id is not None:
+                        # explicit adapter: bypass adaptive selection (Alg 1 l.1)
+                        req.selected_adapter = (req.adapter_id
+                                                if req.adapter_id is not None
+                                                else req.true_adapter)
+                    else:
+                        # scores are computed (and, for a learned router,
+                        # charged) once per request and cached on the slot: a
+                        # pool-exhausted deferral below must not re-roll the
+                        # oracle RNG or re-charge a router forward on retry
+                        scores = slot.sel_scores
+                        if scores is None:
+                            if getattr(self.router, "costs_forward", False):
+                                # solo fallback (router_batching off): one
+                                # router forward ≈ one prompt pass (Table 6)
+                                toks = self._slot_prompt(slot)[None, :]
+                                rids = ([req.request_id]
+                                        if tr is not None else None)
+                                sb, dt = self._timed(("router", slot.bucket, 1),
+                                                     self.router.scores_batch,
+                                                     toks, now=now,
+                                                     requests=rids)
+                                now += dt
+                                self.router_steps += 1
+                                scores = np.asarray(sb)[0]  # el: allow[host-sync]
+                            else:
+                                scores = np.asarray(self.router.scores(req))
+                            slot.sel_scores = scores
+                        # re-select from cached scores each attempt: the pool
+                        # contents change while deferred, so a cached top-k
+                        # adapter may become acquirable (Algorithm 1 intent)
+                        aid, _ = select_adapter(scores, self.manager,
+                                                ecfg.top_k)
+                        req.selected_adapter = aid
+                    if ecfg.policy != "llamacpp":
                         try:
                             res = self.manager.acquire(
                                 req.selected_adapter, now=now)
                         except PoolExhaustedError:
+                            # every pool block is pinned by an in-flight
+                            # request (γ > R under adapter-diverse load):
+                            # leave the slot SELECTING and retry after a
+                            # completion unpins — pins are only held by
+                            # LOADING/PREFILL/GENERATE slots, so the loop
+                            # always progresses elsewhere
                             if tr is not None:
                                 tr.sched(now, "defer_pool", request=req)
-                            continue  # pool fully pinned: defer (see below)
+                            continue
+                        slot.sel_scores = None
                         now = self._finish_acquire(slot, res, now)
                     else:
-                        slot.adapter_slot = 0
+                        slot.sel_scores = None
+                        slot.adapter_slot = 0  # merged weights: adapter rides W
                         slot.state = SlotState.PREFILL
                         if tr is not None:
                             tr.transition(now, slot.index, "selecting",
                                           "prefill", req)
+                    if self.prefix_enabled and \
+                            self._admission_exec_key(req, dlora_mode) is None:
+                        # AAS-routed: the adapter was unknown at admission —
+                        # match now and swap shared pages into the reserved
+                        # table (capacity accounting stays conservative)
+                        self._attach_prefix(slot)
                     progressed = True
-                    continue
-                slot.merged = False
-                if ecfg.policy == "llamacpp":
-                    # baseline executes MERGED: the active adapter was
-                    # folded into W at admission (cost charged there), so
-                    # steps must skip LoRA math entirely — running the
-                    # batched path with adapter_slot=0 would silently
-                    # apply whatever adapter sits in pool slot 0
-                    req.selected_adapter = req.true_adapter
-                    slot.merged = True
-                elif ecfg.policy == "edgelora_no_aas" or req.adapter_id is not None:
-                    # explicit adapter: bypass adaptive selection (Alg 1 l.1)
-                    req.selected_adapter = (req.adapter_id
-                                            if req.adapter_id is not None
-                                            else req.true_adapter)
-                else:
-                    # scores are computed (and, for a learned router,
-                    # charged) once per request and cached on the slot: a
-                    # pool-exhausted deferral below must not re-roll the
-                    # oracle RNG or re-charge a router forward on retry
-                    scores = slot.sel_scores
-                    if scores is None:
-                        if getattr(self.router, "costs_forward", False):
-                            # solo fallback (router_batching off): one
-                            # router forward ≈ one prompt pass (Table 6)
-                            toks = self._slot_prompt(slot)[None, :]
-                            rids = ([req.request_id]
-                                    if tr is not None else None)
-                            sb, dt = self._timed(("router", slot.bucket, 1),
-                                                 self.router.scores_batch,
-                                                 toks, now=now,
-                                                 requests=rids)
-                            now += dt
-                            self.router_steps += 1
-                            scores = np.asarray(sb)[0]
+
+                # ---- async swap-in: transfers that have landed ------------
+                if ecfg.async_swap:
+                    for slot in self.slots.in_state(SlotState.LOADING):
+                        if slot.ready_time <= now:
+                            slot.state = SlotState.PREFILL
+                            if tr is not None:
+                                tr.transition(now, slot.index, "loading",
+                                              "prefill", slot.request)
+                            progressed = True
+                    # queue-ahead prefetch: start transfers for upcoming
+                    # demand while the channel would otherwise sit idle
+                    # (behind any demand loads booked this tick)
+                    if ecfg.prefetch_depth > 0 and ecfg.policy != "llamacpp":
+                        self._run_prefetch(now, dlora_mode)
+
+                # ---- prefill (gather→batch→scatter) ----------------------
+                prefilling = self.slots.in_state(SlotState.PREFILL)
+                if prefilling:
+                    # group same-bucket slots (split by merged-ness: merged
+                    # steps skip LoRA math entirely — and by prefix length:
+                    # prefix-hit rows prefill only their suffix, a different
+                    # jit shape); one jit'd [B, bucket − prefix] prefill per
+                    # group — heterogeneous adapters batch fine, the
+                    # SGMV/einsum delta is per-row
+                    chunk = ecfg.prefill_chunk
+                    groups: Dict[Tuple[int, bool, int], List[Slot]] = {}
+                    for slot in prefilling:
+                        self._slot_prompt(slot)
+                        # chunked: progress starts at the prefix-cache hit
+                        # length (those positions are already served from
+                        # shared pages) and groups key off it — same-progress
+                        # rows share one jit shape, like same-prefix rows do
+                        if slot.prefill_pos < slot.prefix_len:
+                            slot.prefill_pos = slot.prefix_len
+                        start = (slot.prefill_pos if self.chunked
+                                 else slot.prefix_len)
+                        groups.setdefault(
+                            (slot.bucket, slot.merged, start),
+                            []).append(slot)
+                    work: List[Tuple[int, bool, int, List[Slot]]] = []
+                    for (b, merged, pfx), group in groups.items():
+                        if ecfg.prefill_batching:
+                            work.append((b, merged, pfx, group))
+                        else:  # pre-batching baseline: one B=1 call per slot
+                            work.extend((b, merged, pfx, [s]) for s in group)
+                    for b, merged, start, group in work:
+                        span = b - start
+                        # whole-span groups take the existing un-chunked
+                        # paths (prefill_chunk=None stays bit-identical; a
+                        # terminal paged chunk reuses the prefix-suffix
+                        # machinery wholesale). Dense mid-prompt progress
+                        # (start > 0) always routes through _prefill_chunk —
+                        # _prefill_group's suffix branch is paged-only.
+                        if not self.chunked or (chunk >= span
+                                                and (start == 0 or self.paged)):
+                            now += self._prefill_group(b, merged, start,
+                                                       group, now)
                         else:
-                            scores = np.asarray(self.router.scores(req))
-                        slot.sel_scores = scores
-                    # re-select from cached scores each attempt: the pool
-                    # contents change while deferred, so a cached top-k
-                    # adapter may become acquirable (Algorithm 1 intent)
-                    aid, _ = select_adapter(scores, self.manager,
-                                            ecfg.top_k)
-                    req.selected_adapter = aid
-                if ecfg.policy != "llamacpp":
-                    try:
-                        res = self.manager.acquire(
-                            req.selected_adapter, now=now)
-                    except PoolExhaustedError:
-                        # every pool block is pinned by an in-flight
-                        # request (γ > R under adapter-diverse load):
-                        # leave the slot SELECTING and retry after a
-                        # completion unpins — pins are only held by
-                        # LOADING/PREFILL/GENERATE slots, so the loop
-                        # always progresses elsewhere
-                        if tr is not None:
-                            tr.sched(now, "defer_pool", request=req)
-                        continue
-                    slot.sel_scores = None
-                    now = self._finish_acquire(slot, res, now)
-                else:
-                    slot.sel_scores = None
-                    slot.adapter_slot = 0  # merged weights: adapter rides W
-                    slot.state = SlotState.PREFILL
-                    if tr is not None:
-                        tr.transition(now, slot.index, "selecting",
-                                      "prefill", req)
-                if self.prefix_enabled and \
-                        self._admission_exec_key(req, dlora_mode) is None:
-                    # AAS-routed: the adapter was unknown at admission —
-                    # match now and swap shared pages into the reserved
-                    # table (capacity accounting stays conservative)
-                    self._attach_prefix(slot)
-                progressed = True
+                            now += self._prefill_chunk(
+                                b, merged, start, min(chunk, span), group, now)
+                    progressed = True
 
-            # ---- async swap-in: transfers that have landed ------------
-            if ecfg.async_swap:
-                for slot in self.slots.in_state(SlotState.LOADING):
-                    if slot.ready_time <= now:
-                        slot.state = SlotState.PREFILL
-                        if tr is not None:
-                            tr.transition(now, slot.index, "loading",
-                                          "prefill", slot.request)
-                        progressed = True
-                # queue-ahead prefetch: start transfers for upcoming
-                # demand while the channel would otherwise sit idle
-                # (behind any demand loads booked this tick)
-                if ecfg.prefetch_depth > 0 and ecfg.policy != "llamacpp":
-                    self._run_prefetch(now, dlora_mode)
-
-            # ---- prefill (gather→batch→scatter) ----------------------
-            prefilling = self.slots.in_state(SlotState.PREFILL)
-            if prefilling:
-                # group same-bucket slots (split by merged-ness: merged
-                # steps skip LoRA math entirely — and by prefix length:
-                # prefix-hit rows prefill only their suffix, a different
-                # jit shape); one jit'd [B, bucket − prefix] prefill per
-                # group — heterogeneous adapters batch fine, the
-                # SGMV/einsum delta is per-row
-                chunk = ecfg.prefill_chunk
-                groups: Dict[Tuple[int, bool, int], List[Slot]] = {}
-                for slot in prefilling:
-                    self._slot_prompt(slot)
-                    # chunked: progress starts at the prefix-cache hit
-                    # length (those positions are already served from
-                    # shared pages) and groups key off it — same-progress
-                    # rows share one jit shape, like same-prefix rows do
-                    if slot.prefill_pos < slot.prefix_len:
-                        slot.prefill_pos = slot.prefix_len
-                    start = (slot.prefill_pos if self.chunked
-                             else slot.prefix_len)
-                    groups.setdefault(
-                        (slot.bucket, slot.merged, start),
-                        []).append(slot)
-                work: List[Tuple[int, bool, int, List[Slot]]] = []
-                for (b, merged, pfx), group in groups.items():
-                    if ecfg.prefill_batching:
-                        work.append((b, merged, pfx, group))
-                    else:  # pre-batching baseline: one B=1 call per slot
-                        work.extend((b, merged, pfx, [s]) for s in group)
-                for b, merged, start, group in work:
-                    span = b - start
-                    # whole-span groups take the existing un-chunked
-                    # paths (prefill_chunk=None stays bit-identical; a
-                    # terminal paged chunk reuses the prefix-suffix
-                    # machinery wholesale). Dense mid-prompt progress
-                    # (start > 0) always routes through _prefill_chunk —
-                    # _prefill_group's suffix branch is paged-only.
-                    if not self.chunked or (chunk >= span
-                                            and (start == 0 or self.paged)):
-                        now += self._prefill_group(b, merged, start,
-                                                   group, now)
-                    else:
-                        now += self._prefill_chunk(
-                            b, merged, start, min(chunk, span), group, now)
-                progressed = True
-
-            # ---- batched decode (Batch LoRA Inference) ----------------
-            gen = self.slots.in_state(SlotState.GENERATE)
-            if gen and self.paged:
-                # allocate this step's page per sequence up front; a dry
-                # arena preempts the youngest admission (LIFO restart —
-                # greedy decode recomputes the identical stream later)
-                gen = self._secure_decode_blocks(gen, now)
-                progressed = True  # preemption alone is progress
-            if gen:
-                rids = ([s.request.request_id for s in gen]
-                        if tr is not None else None)
-                tokens = np.zeros((ecfg.n_slots,), np.int32)
-                pos = np.zeros((ecfg.n_slots,), np.int32)
-                sids = np.zeros((ecfg.n_slots,), np.int32)
-                for slot in gen:
-                    tokens[slot.index] = slot.last_token
-                    pos[slot.index] = slot.pos
-                    sids[slot.index] = slot.adapter_slot
-                merged_step = (ecfg.policy == "llamacpp"
-                               or (ecfg.policy == "dlora"
-                                   and dlora_mode == "merged"))
-                if self.paged:
-                    tables, lengths, plens, bwlens = \
-                        self._decode_tables(gen)
-                    if merged_step:
+                # ---- batched decode (Batch LoRA Inference) ----------------
+                gen = self.slots.in_state(SlotState.GENERATE)
+                if gen and self.paged:
+                    # allocate this step's page per sequence up front; a dry
+                    # arena preempts the youngest admission (LIFO restart —
+                    # greedy decode recomputes the identical stream later)
+                    gen = self._secure_decode_blocks(gen, now)
+                    progressed = True  # preemption alone is progress
+                if gen:
+                    rids = ([s.request.request_id for s in gen]
+                            if tr is not None else None)
+                    tokens = np.zeros((ecfg.n_slots,), np.int32)
+                    pos = np.zeros((ecfg.n_slots,), np.int32)
+                    sids = np.zeros((ecfg.n_slots,), np.int32)
+                    for slot in gen:
+                        tokens[slot.index] = slot.last_token
+                        pos[slot.index] = slot.pos
+                        sids[slot.index] = slot.adapter_slot
+                    merged_step = (ecfg.policy == "llamacpp"
+                                   or (ecfg.policy == "dlora"
+                                       and dlora_mode == "merged"))
+                    if self.paged:
+                        tables, lengths, plens, bwlens = \
+                            self._decode_tables(gen)
+                        if merged_step:
+                            (next_toks, self.cache), dt = self._timed(
+                                ("decode_merged",), self._decode_merged_paged,
+                                self.params, jnp.asarray(tokens), self.cache,
+                                tables, lengths, plens, bwlens,
+                                jnp.asarray(pos), now=now, requests=rids)
+                        else:
+                            (next_toks, self.cache), dt = self._timed(
+                                ("decode",), self._decode_paged, self.params,
+                                self.lora_pool, jnp.asarray(tokens),
+                                self.cache, tables, lengths, plens, bwlens,
+                                jnp.asarray(pos), jnp.asarray(sids),
+                                now=now, requests=rids)
+                    elif merged_step:
                         (next_toks, self.cache), dt = self._timed(
-                            ("decode_merged",), self._decode_merged_paged,
+                            ("decode_merged",), self._decode_merged,
                             self.params, jnp.asarray(tokens), self.cache,
-                            tables, lengths, plens, bwlens,
                             jnp.asarray(pos), now=now, requests=rids)
                     else:
                         (next_toks, self.cache), dt = self._timed(
-                            ("decode",), self._decode_paged, self.params,
-                            self.lora_pool, jnp.asarray(tokens),
-                            self.cache, tables, lengths, plens, bwlens,
+                            ("decode",), self._decode, self.params,
+                            self.lora_pool, jnp.asarray(tokens), self.cache,
                             jnp.asarray(pos), jnp.asarray(sids),
                             now=now, requests=rids)
-                elif merged_step:
-                    (next_toks, self.cache), dt = self._timed(
-                        ("decode_merged",), self._decode_merged,
-                        self.params, jnp.asarray(tokens), self.cache,
-                        jnp.asarray(pos), now=now, requests=rids)
-                else:
-                    (next_toks, self.cache), dt = self._timed(
-                        ("decode",), self._decode, self.params,
-                        self.lora_pool, jnp.asarray(tokens), self.cache,
-                        jnp.asarray(pos), jnp.asarray(sids),
-                        now=now, requests=rids)
-                now += dt
-                self.decode_steps += 1
-                next_np = np.asarray(next_toks)
-                for slot in gen:
-                    req = slot.request
-                    slot.last_token = int(next_np[slot.index])
-                    slot.pos += 1
-                    req.generated += 1
-                    req.tokens.append(slot.last_token)
-                    if req.generated >= req.output_len \
-                            or slot.pos >= ecfg.max_ctx - 1:
-                        req.finish_time = now
-                        if ecfg.policy != "llamacpp" \
-                                and not slot.merged:
-                            self.manager.unpin(req.selected_adapter)
-                        if tr is not None:
-                            tr.transition(now, slot.index, "generate",
-                                          "idle", req)
-                        if self.paged:
-                            self.kvpool.release(req.request_id)
-                        completed.append(slot.release())
-                progressed = True
+                    now += dt
+                    self.decode_steps += 1
+                    next_np = np.asarray(next_toks)  # el: allow[host-sync]
+                    for slot in gen:
+                        req = slot.request
+                        slot.last_token = int(next_np[slot.index])
+                        slot.pos += 1
+                        req.generated += 1
+                        req.tokens.append(slot.last_token)
+                        if req.generated >= req.output_len \
+                                or slot.pos >= ecfg.max_ctx - 1:
+                            req.finish_time = now
+                            if ecfg.policy != "llamacpp" \
+                                    and not slot.merged:
+                                self.manager.unpin(req.selected_adapter)
+                            if tr is not None:
+                                tr.transition(now, slot.index, "generate",
+                                              "idle", req)
+                            if self.paged:
+                                self.kvpool.release(req.request_id)
+                            completed.append(slot.release())
+                    progressed = True
 
-            # ---- per-iteration step time (compute charged this tick) --
-            step_busy = self.busy_time - busy0
-            if step_busy > 0.0:
-                self._note_step(step_busy)
+                # ---- per-iteration step time (compute charged this tick) --
+                step_busy = self.busy_time - busy0
+                if step_busy > 0.0:
+                    self._note_step(step_busy)
 
-            # ---- once-per-step metrics sampling (tracing only) --------
+                # ---- once-per-step metrics sampling (tracing only) --------
+                if tr is not None:
+                    if self.paged:
+                        tr.metrics.gauge("arena_blocks_used").set(
+                            self.kvpool.used_blocks)
+                    tr.sample(
+                        now,
+                        queue_depth=len(self._ready),
+                        active_slots=sum(s.state != SlotState.IDLE
+                                         for s in self.slots.slots),
+                        decode_batch=len(gen),
+                        resident_adapters=self.manager.n_resident,
+                        loading_adapters=len(self.manager.loading))
+
+                # ---- idle / load-blocked: jump to the earliest event ------
+                if not progressed:
+                    loading = self.slots.in_state(SlotState.LOADING)
+                    if loading:
+                        wake = min(s.ready_time for s in loading)
+                        if not self._ready and self._qi < len(queue):
+                            arr = max(now, queue[self._qi].arrival_time)
+                            if now < arr < wake:
+                                now = arr  # an arrival may unblock admission
+                                continue
+                        # every runnable slot is load-blocked: the clock
+                        # stalls on the transfer channel — the serialization
+                        # async swap-in exists to minimize
+                        self.load_stall_seconds += max(0.0, wake - now)
+                        now = max(now, wake)
+                    elif self._ready:
+                        continue  # unreachable in practice: ready work
+                        # re-admits (or an active slot progresses) next tick
+                    elif self._qi < len(queue):
+                        now = max(now, queue[self._qi].arrival_time)
+                    else:
+                        break
+
             if tr is not None:
-                if self.paged:
-                    tr.metrics.gauge("arena_blocks_used").set(
-                        self.kvpool.used_blocks)
-                tr.sample(
-                    now,
-                    queue_depth=len(self._ready),
-                    active_slots=sum(s.state != SlotState.IDLE
-                                     for s in self.slots.slots),
-                    decode_batch=len(gen),
-                    resident_adapters=self.manager.n_resident,
-                    loading_adapters=len(self.manager.loading))
-
-            # ---- idle / load-blocked: jump to the earliest event ------
-            if not progressed:
-                loading = self.slots.in_state(SlotState.LOADING)
-                if loading:
-                    wake = min(s.ready_time for s in loading)
-                    if not self._ready and self._qi < len(queue):
-                        arr = max(now, queue[self._qi].arrival_time)
-                        if now < arr < wake:
-                            now = arr  # an arrival may unblock admission
-                            continue
-                    # every runnable slot is load-blocked: the clock
-                    # stalls on the transfer channel — the serialization
-                    # async swap-in exists to minimize
-                    self.load_stall_seconds += max(0.0, wake - now)
-                    now = max(now, wake)
-                elif self._ready:
-                    continue  # unreachable in practice: ready work
-                    # re-admits (or an active slot progresses) next tick
-                elif self._qi < len(queue):
-                    now = max(now, queue[self._qi].arrival_time)
-                else:
-                    break
-
-        if tr is not None:
-            tr.finish(now)
+                tr.finish(now)
+                # recompile watchdog: audit every shape the jit cache holds
+                # against the bound the power-of-two group padding promises
+                tr.watchdog_report = jit_cache_report(
+                    self._durations.keys(), buckets=self._buckets,
+                    n_slots=ecfg.n_slots, prefill_chunk=ecfg.prefill_chunk,
+                    prefix_cache=self.prefix_enabled,
+                    block_size=ecfg.kv_block_size, max_ctx=ecfg.max_ctx)
+                if tr.strict_watchdog and not tr.watchdog_report["ok"]:
+                    raise JitRecompileError(
+                        "jit cache exceeded the documented shape bound:\n  "
+                        + "\n  ".join(tr.watchdog_report["violations"]))
+        finally:
+            # hook hygiene (EL006): the observers wired above must
+            # never outlive this serve() — a mid-loop exception (pool
+            # error, strict-watchdog raise) would otherwise leak them
+            # into the next, possibly untraced, run
             self.manager.on_event = None
             if self.paged:
                 self.kvpool.on_event = None
-            # recompile watchdog: audit every shape the jit cache holds
-            # against the bound the power-of-two group padding promises
-            tr.watchdog_report = jit_cache_report(
-                self._durations.keys(), buckets=self._buckets,
-                n_slots=ecfg.n_slots, prefill_chunk=ecfg.prefill_chunk,
-                prefix_cache=self.prefix_enabled,
-                block_size=ecfg.kv_block_size, max_ctx=ecfg.max_ctx)
-            if tr.strict_watchdog and not tr.watchdog_report["ok"]:
-                raise JitRecompileError(
-                    "jit cache exceeded the documented shape bound:\n  "
-                    + "\n  ".join(tr.watchdog_report["violations"]))
         duration = max(now, 1e-9)
         kv_stats = None
         if self.paged:
@@ -1336,7 +1363,7 @@ class EdgeLoRAEngine:
         self.prefill_steps += 1
         self.prefill_batch_hist[len(group)] = \
             self.prefill_batch_hist.get(len(group), 0) + 1
-        first_np = np.asarray(first)
+        first_np = np.asarray(first)  # el: allow[host-sync] -- output stream
         for i, slot in enumerate(group):
             req = slot.request
             slot.pos = req.prompt_len
@@ -1474,7 +1501,7 @@ class EdgeLoRAEngine:
         self.prefill_steps += 1
         self.prefill_batch_hist[len(group)] = \
             self.prefill_batch_hist.get(len(group), 0) + 1
-        first_np = np.asarray(first)
+        first_np = np.asarray(first)  # el: allow[host-sync] -- output stream
         for i, slot in enumerate(group):
             req = slot.request
             if req.prompt_len <= end:
@@ -1502,13 +1529,14 @@ class EdgeLoRAEngine:
     # shared-prefix radix cache (splice, COW, stats)
     # ------------------------------------------------------------------
 
-    def _exec_key(self, slot: Slot):
+    def _exec_key(self, slot: Slot) -> Tuple:
         """Execution identity under which prefix KV is shareable: KV at
         depth > 0 depends on the residual stream, hence on the adapter
         and on merged- vs unmerged-LoRA execution."""
         return (slot.merged, slot.request.selected_adapter)
 
-    def _admission_exec_key(self, req: Request, dlora_mode: str):
+    def _admission_exec_key(self, req: Request,
+                            dlora_mode: str) -> Tuple:
         """The execution identity a request will run under, when it is
         already determined at admission time (every policy except
         AAS-routed edgelora, where the router picks the adapter at
@@ -1528,7 +1556,7 @@ class EdgeLoRAEngine:
             return (False, req.true_adapter)
         return None
 
-    def _admit_prefix(self, req: Request, exec_key) -> int:
+    def _admit_prefix(self, req: Request, exec_key: Tuple) -> int:
         """Admission-time prefix adoption (execution identity known):
         match, splice shared pages, allocate only the suffix. Returns
         the prefix length served from cache (0 on a miss)."""
@@ -1595,7 +1623,8 @@ class EdgeLoRAEngine:
     # adapter swap-in (reservation routing, queue-ahead prefetch)
     # ------------------------------------------------------------------
 
-    def _finish_acquire(self, slot: Slot, res, now: float) -> float:
+    def _finish_acquire(self, slot: Slot, res: Any,
+                        now: float) -> float:
         """Pin the reserved adapter and route the slot by swap mode:
         async parks it in LOADING until the transfer's ready_time (other
         slots keep prefilling/decoding); sync stalls the clock to
@@ -1716,7 +1745,7 @@ class EdgeLoRAEngine:
     # paged-KV scheduling (block tables, preemption)
     # ------------------------------------------------------------------
 
-    def _decode_tables(self, gen: List[Slot]):
+    def _decode_tables(self, gen: List[Slot]) -> Tuple[Any, ...]:
         """[n_slots, max_blocks] physical page table + [n_slots] written
         lengths / prompt lengths / prefill buckets for a decode step.
         Rows of slots not decoding this tick are -1 / 0 — their gathers

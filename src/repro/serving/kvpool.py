@@ -71,7 +71,7 @@ class PagedKVPool:
     deferral/preemption machinery ever sees an exhausted arena.
     """
 
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int) -> None:
         assert n_blocks > 0 and block_size > 0
         self.n_blocks = n_blocks
         self.block_size = block_size
@@ -88,7 +88,7 @@ class PagedKVPool:
         # None (default) costs one condition per event site
         self.on_event: Optional[Any] = None
 
-    def _event(self, name: str, **args) -> None:
+    def _event(self, name: str, **args: Any) -> None:
         if self.on_event is not None:
             self.on_event(name, args)
 
@@ -271,7 +271,7 @@ class PagedKVPool:
             self._event("cow", seq=seq_id, src=pair[0], dst=pair[1])
         return pair
 
-    def slot_of(self, seq_id: int, pos: int):
+    def slot_of(self, seq_id: int, pos: int) -> Tuple[int, int]:
         """(physical block, offset) of token ``pos`` of sequence seq_id."""
         assert pos < self.lengths[seq_id]
         table = self.tables[seq_id]
@@ -352,7 +352,7 @@ def attn_node_paths(cache: Dict) -> Tuple[Tuple[Tuple[str, ...], int], ...]:
     """(path, clen) for every attention node in a dense cache template."""
     out: List[Tuple[Tuple[str, ...], int]] = []
 
-    def walk(node, path):
+    def walk(node: Any, path: Tuple[str, ...]) -> None:
         if _is_attn_node(node):
             out.append((path, node["k"].shape[-3]))
         elif isinstance(node, dict):
@@ -407,7 +407,7 @@ def build_arena(cache: Dict, meta: PagedMeta) -> Dict:
     return out
 
 
-def ring_view_positions(lengths, clen: int):
+def ring_view_positions(lengths: Any, clen: int) -> Any:
     """[B, clen] logical position stored at each ring index, or -1.
 
     Reproduces the dense ring-buffer invariant: after writing positions
@@ -422,7 +422,8 @@ def ring_view_positions(lengths, clen: int):
     return jnp.where((lengths[:, None] > 0) & (p >= 0), p, -1)
 
 
-def dense_ring_positions(lengths, prompt_lens, pad_lens, clen: int):
+def dense_ring_positions(lengths: Any, prompt_lens: Any,
+                         pad_lens: Any, clen: int) -> Any:
     """[B, clen] position each dense ring index shows *mid-serving*.
 
     The dense engine's write history per sequence is NOT a prefix: the
@@ -449,7 +450,8 @@ def dense_ring_positions(lengths, prompt_lens, pad_lens, clen: int):
                      jnp.where((ppre >= 0) & (ppre < lp), ppre, -1))
 
 
-def _page_coords(meta: PagedMeta, tables, positions):
+def _page_coords(meta: PagedMeta, tables: Any,
+                 positions: Any) -> Tuple[Any, Any]:
     """(block, offset) arrays for logical ``positions`` (any shape with
     leading batch); invalid positions (or -1 table rows) → trash block."""
     pc = jnp.maximum(positions, 0)
@@ -458,7 +460,8 @@ def _page_coords(meta: PagedMeta, tables, positions):
     return blk, pc % meta.block_size
 
 
-def paged_view(arena_cache: Dict, tables, lengths, prompt_lens, pad_lens,
+def paged_view(arena_cache: Dict, tables: Any, lengths: Any,
+               prompt_lens: Any, pad_lens: Any,
                meta: PagedMeta,
                page_gather: Optional[Callable] = None) -> Dict:
     """Reconstruct the dense ring-cache view a decode step attends over.
@@ -505,8 +508,9 @@ def paged_view(arena_cache: Dict, tables, lengths, prompt_lens, pad_lens,
     return out
 
 
-def scatter_prefill(arena_cache: Dict, mini_cache: Dict, tables, lengths,
-                    pad_lens, slot_idx, meta: PagedMeta) -> Dict:
+def scatter_prefill(arena_cache: Dict, mini_cache: Dict, tables: Any,
+                    lengths: Any, pad_lens: Any, slot_idx: Any,
+                    meta: PagedMeta) -> Dict:
     """Land a batched-prefill group's fresh cache into the paged cache.
 
     Attention nodes: the mini cache's ring was bulk-written with the
@@ -524,7 +528,7 @@ def scatter_prefill(arena_cache: Dict, mini_cache: Dict, tables, lengths,
     attn = dict(meta.attn_paths)
     lengths_b = jnp.asarray(lengths, jnp.int32)[:, None]
 
-    def walk(anode, mnode, path):
+    def walk(anode: Any, mnode: Any, path: Tuple[str, ...]) -> None:
         nonlocal out
         if path in attn:
             clen = attn[path]
@@ -566,7 +570,7 @@ def prefix_unsupported_reason(cache: Dict, max_ctx: int) -> Optional[str]:
     """
     reasons: List[str] = []
 
-    def walk(node, path):
+    def walk(node: Any, path: Tuple[str, ...]) -> None:
         name = "/".join(path) or "<root>"
         if _is_attn_node(node):
             if path and path[0] == "shared":
@@ -590,7 +594,7 @@ def prefix_unsupported_reason(cache: Dict, max_ctx: int) -> Optional[str]:
     return reasons[0] if reasons else None
 
 
-def gather_prefix(arena_cache: Dict, tables, prefix_len: int,
+def gather_prefix(arena_cache: Dict, tables: Any, prefix_len: int,
                   meta: PagedMeta) -> Dict:
     """Gather positions [0, prefix_len) of every attention node out of
     the page arena: a tree mirroring the cache structure whose leaves are
@@ -615,8 +619,8 @@ def gather_prefix(arena_cache: Dict, tables, prefix_len: int,
     return out
 
 
-def scatter_suffix(arena_cache: Dict, mini_cache: Dict, tables, lengths,
-                   prefix_len: int, suffix_len: int,
+def scatter_suffix(arena_cache: Dict, mini_cache: Dict, tables: Any,
+                   lengths: Any, prefix_len: int, suffix_len: int,
                    meta: PagedMeta) -> Dict:
     """Land a suffix prefill's fresh KV into the paged cache.
 
@@ -648,7 +652,8 @@ def scatter_suffix(arena_cache: Dict, mini_cache: Dict, tables, lengths,
     return out
 
 
-def copy_block(arena_cache: Dict, src, dst, meta: PagedMeta) -> Dict:
+def copy_block(arena_cache: Dict, src: Any, dst: Any,
+               meta: PagedMeta) -> Dict:
     """Copy-on-write page copy: physical block ``src`` → ``dst`` on every
     attention leaf (scalars, traced — one jit shape covers all copies)."""
     out = arena_cache
@@ -660,8 +665,8 @@ def copy_block(arena_cache: Dict, src, dst, meta: PagedMeta) -> Dict:
     return out
 
 
-def scatter_decode(arena_cache: Dict, view_cache: Dict, tables, pos,
-                   meta: PagedMeta) -> Dict:
+def scatter_decode(arena_cache: Dict, view_cache: Dict, tables: Any,
+                   pos: Any, meta: PagedMeta) -> Dict:
     """Persist one decode step: each row's freshly written ring entry
     (index ``pos % clen`` — where ``cache_update`` just wrote it) moves
     from the view into its page; non-attention leaves (recurrent SSM
@@ -673,7 +678,7 @@ def scatter_decode(arena_cache: Dict, view_cache: Dict, tables, pos,
     pos = jnp.asarray(pos, jnp.int32)
     rows = jnp.arange(pos.shape[0])
 
-    def walk(anode, vnode, path):
+    def walk(anode: Any, vnode: Any, path: Tuple[str, ...]) -> None:
         nonlocal out
         if path in attn:
             clen = attn[path]

@@ -30,7 +30,7 @@ import numpy as np
 from repro.core.slots import Request
 
 
-def fmt_num(v, digits: int = 3) -> str:
+def fmt_num(v: Optional[float], digits: int = 3) -> str:
     """``'n/a'`` for None/NaN/inf, fixed-point otherwise — the one
     number format every digest row (and ``tools/trace_report.py``)
     shares."""
@@ -278,7 +278,7 @@ def _slo_stats(requests: List[Request]) -> Dict:
 
 
 def summarize(requests: List[Request], duration: float,
-              slo_seconds: float = 6.0, cache_stats=None,
+              slo_seconds: float = 6.0, cache_stats: Optional[Dict] = None,
               energy_proxy: Optional[float] = None,
               step_stats: Optional[Dict] = None) -> ServingSummary:
     """Aggregate a served trace. ``step_stats`` splats extra

@@ -20,9 +20,10 @@ reused by any component that wants cheap time-series accounting.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Tuple, Union
+from typing import Dict, List, Tuple, Type, TypeVar, Union
 
 Number = Union[int, float]
+_M = TypeVar("_M", "Counter", "Gauge", "Histogram")
 
 
 class Counter:
@@ -30,7 +31,7 @@ class Counter:
 
     __slots__ = ("name", "value")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str) -> None:
         self.name = name
         self.value: float = 0
 
@@ -45,7 +46,7 @@ class Gauge:
 
     __slots__ = ("name", "value")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str) -> None:
         self.name = name
         self.value: float = 0
 
@@ -62,7 +63,7 @@ class Histogram:
 
     __slots__ = ("name", "bins", "count", "total")
 
-    def __init__(self, name: str):
+    def __init__(self, name: str) -> None:
         self.name = name
         self.bins: Dict[str, int] = {}
         self.count = 0
@@ -94,11 +95,11 @@ class MetricsRegistry:
     replacing the last point when ``t`` repeats.
     """
 
-    def __init__(self):
-        self._metrics: Dict[str, object] = {}
+    def __init__(self) -> None:
+        self._metrics: Dict[str, Union[Counter, Gauge, Histogram]] = {}
         self.series: Dict[str, List[Tuple[float, float]]] = {}
 
-    def _get(self, name: str, cls):
+    def _get(self, name: str, cls: Type[_M]) -> _M:
         m = self._metrics.get(name)
         if m is None:
             m = self._metrics[name] = cls(name)
@@ -127,6 +128,6 @@ class MetricsRegistry:
             else:
                 series.append(point)
 
-    def as_dict(self) -> Dict[str, List[Tuple[float, float]]]:
+    def as_dict(self) -> Dict[str, List[List[float]]]:
         """Series as plain lists (JSON-ready)."""
         return {k: [list(p) for p in v] for k, v in self.series.items()}

@@ -64,7 +64,7 @@ class _Node:
     __slots__ = ("key", "parent", "children", "block", "last_used")
 
     def __init__(self, key: Optional[bytes], parent: Optional["_Node"],
-                 block: int):
+                 block: int) -> None:
         self.key = key
         self.parent = parent
         self.children: Dict[bytes, _Node] = {}
@@ -75,7 +75,7 @@ class _Node:
 class PrefixCache:
     """Radix index over token-block hashes → physical arena pages."""
 
-    def __init__(self, pool, block_size: int):
+    def __init__(self, pool: Any, block_size: int) -> None:
         self.pool = pool
         # self-wire as the pool's reclaimer: the memoized reclaimable()
         # below is only correct if every cached-page refcount change
@@ -97,7 +97,7 @@ class PrefixCache:
 
     # -- radix walk ------------------------------------------------------
 
-    def _block_keys(self, tokens) -> List[bytes]:
+    def _block_keys(self, tokens: Any) -> List[bytes]:
         toks = np.asarray(tokens, dtype=np.int32)
         bs = self.block_size
         return [toks[i * bs:(i + 1) * bs].tobytes()
@@ -107,7 +107,7 @@ class PrefixCache:
         self._tick += 1
         node.last_used = self._tick
 
-    def match(self, exec_key: Hashable, tokens) -> List[int]:
+    def match(self, exec_key: Hashable, tokens: Any) -> List[int]:
         """Physical pages of the longest cached block-aligned prefix of
         ``tokens`` under ``exec_key`` (empty on a miss). Touches the
         matched path (LRU recency)."""
@@ -125,7 +125,8 @@ class PrefixCache:
             node = child
         return blocks
 
-    def insert(self, exec_key: Hashable, tokens, table: List[int]) -> int:
+    def insert(self, exec_key: Hashable, tokens: Any,
+               table: List[int]) -> int:
         """Index every full block of a freshly prefilled prompt: block i
         of ``tokens`` is served by physical page ``table[i]``. Existing
         nodes are kept (first writer is canonical — identical content);

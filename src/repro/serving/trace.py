@@ -52,7 +52,7 @@ from __future__ import annotations
 
 import json
 import math
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from repro.serving.metrics_registry import MetricsRegistry
 
@@ -85,7 +85,7 @@ class _RequestAcct:
                  "queue_since", "preempted", "admits", "prefill_chunks",
                  "finish")
 
-    def __init__(self, arrival: float):
+    def __init__(self, arrival: float) -> None:
         self.arrival = arrival
         self.queue_wait = 0.0
         self.segments = {s: 0.0 for s in _STATE_SEGMENT.values()}
@@ -117,7 +117,7 @@ class EngineTracer:
     records the report without failing the run.
     """
 
-    def __init__(self, strict_watchdog: bool = True):
+    def __init__(self, strict_watchdog: bool = True) -> None:
         self.events: List[Dict] = []
         self.now = 0.0
         self.metrics = MetricsRegistry()
@@ -175,14 +175,15 @@ class EngineTracer:
         self.events.append(ev)
 
     def _emit_state_span(self, slot: int, state: str, t0: float,
-                         t1: float, rid: Optional[int], **extra) -> None:
+                         t1: float, rid: Optional[int],
+                         **extra: Any) -> None:
         args = {"request": rid}
         args.update(extra)
         self._emit(t0, f"slot{slot}", "state", state, dur=t1 - t0,
                    args=args)
 
     def transition(self, t: float, slot: int, old: str, new: str,
-                   request, **extra) -> None:
+                   request: Any, **extra: Any) -> None:
         """Record ``slot`` leaving ``old`` for ``new`` at virtual time
         ``t``; closes the open ``old`` span and integrates the request's
         latency accounting. ``request`` is the engine's Request object
@@ -242,7 +243,8 @@ class EngineTracer:
                    "jit-compile " + " ".join(str(k) for k in key),
                    args={"key": list(key)})
 
-    def sched(self, t: float, name: str, request=None, **args) -> None:
+    def sched(self, t: float, name: str, request: Any = None,
+              **args: Any) -> None:
         """Scheduler decision instant: admit / defer_pool / defer_kv /
         shed / timeout / preempt / requeue / merge."""
         self.clock(t)
@@ -276,7 +278,7 @@ class EngineTracer:
 
     # -- per-step metrics sampling ---------------------------------------
 
-    def sample(self, t: float, **gauges) -> None:
+    def sample(self, t: float, **gauges: float) -> None:
         self.clock(t)
         for name, value in gauges.items():
             self.metrics.gauge(name).set(value)
@@ -366,7 +368,7 @@ class EngineTracer:
             },
         }
 
-    def export(self, path) -> None:
+    def export(self, path: Any) -> None:
         with open(path, "w") as f:
             json.dump(self.to_json(), f)
 

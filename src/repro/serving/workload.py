@@ -76,7 +76,7 @@ class WorkloadConfig:
     vocab_size: int = 512
     seed: int = 0
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         il, iu = self.input_range
         ol, ou = self.output_range
         if not (0 < il <= iu):
@@ -123,13 +123,22 @@ def adapter_popularity(n: int, alpha: float) -> np.ndarray:
     return w / w.sum()
 
 
+# RNG stream salts (EL005): each optional draw consumer gets its own
+# `default_rng([seed, SALT])` stream so enabling one knob never shifts
+# the values another stream produces. Salts must stay distinct — the
+# linter cross-checks every constant salt in serving/core.
+SALT_SYSTEM_PROMPTS = 0xED6E
+SALT_SLO_CLASSES = 0x510
+SALT_LONG_PROMPTS = 0x7A11
+
+
 def system_prompts(cfg: WorkloadConfig) -> Dict[int, np.ndarray]:
     """The per-adapter system prompts a trace opens its requests with
     (deterministic in (seed, adapter) — a dedicated stream, so changing
     trace-length knobs never reshuffles tenant prompts)."""
     if cfg.system_prompt_len <= 0:
         return {}
-    srng = np.random.default_rng([cfg.seed, 0xED6E])
+    srng = np.random.default_rng([cfg.seed, SALT_SYSTEM_PROMPTS])
     return {i: srng.integers(0, cfg.vocab_size, cfg.system_prompt_len,
                              dtype=np.int32)
             for i in range(cfg.n_adapters)}
@@ -139,14 +148,16 @@ def generate_trace(cfg: WorkloadConfig) -> List[Request]:
     """Draw one trace. See the module docstring for the per-stream draw
     order — optional knobs (system prompts, SLO classes, long prompts)
     use dedicated streams so enabling them never perturbs the main one."""
-    rng = np.random.default_rng(cfg.seed)
+    # el: allow[rng-stream] -- the historical whole-trace main stream:
+    # salting it now would shift every existing golden trace
+    rng = np.random.default_rng(cfg.seed)  # el: allow[rng-stream]
     probs = adapter_popularity(cfg.n_adapters, cfg.alpha)
     shape = 1.0 / (cfg.cv ** 2)
     scale = cfg.cv ** 2 / cfg.request_rate
     sys_prompts = system_prompts(cfg)
-    slo_rng = (np.random.default_rng([cfg.seed, 0x510])
+    slo_rng = (np.random.default_rng([cfg.seed, SALT_SLO_CLASSES])
                if cfg.interactive_frac > 0 else None)
-    long_rng = (np.random.default_rng([cfg.seed, 0x7A11])
+    long_rng = (np.random.default_rng([cfg.seed, SALT_LONG_PROMPTS])
                 if cfg.long_prompt_frac > 0 else None)
 
     reqs: List[Request] = []

@@ -18,6 +18,7 @@ from __future__ import annotations
 import re
 import sys
 from pathlib import Path
+from typing import Optional, Sequence
 
 # inline links/images: [text](target) — code spans are stripped first
 _LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
@@ -34,8 +35,8 @@ def _slug(heading: str) -> str:
     return text.replace(" ", "-")
 
 
-def _anchors(path: Path) -> set:
-    out = set()
+def _anchors(path: Path) -> set[str]:
+    out: set[str] = set()
     in_fence = False
     for line in path.read_text(encoding="utf-8").splitlines():
         if line.lstrip().startswith("```"):
@@ -56,8 +57,8 @@ def _rel(path: Path, root: Path) -> str:
         return str(path)
 
 
-def check_file(path: Path, root: Path) -> list:
-    errors = []
+def check_file(path: Path, root: Path) -> list[str]:
+    errors: list[str] = []
     in_fence = False
     for lineno, line in enumerate(
             path.read_text(encoding="utf-8").splitlines(), start=1):
@@ -83,8 +84,8 @@ def check_file(path: Path, root: Path) -> list:
     return errors
 
 
-def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
     root = Path(__file__).resolve().parent.parent
     if argv:
         files = [Path(a).resolve() for a in argv]

@@ -1,0 +1,11 @@
+"""Engine invariant linter (repo-specific static analysis).
+
+``tools/lint`` is a stdlib-``ast`` framework plus one module per rule
+(``tools/lint/rules/el0*.py``) enforcing the serving engine's
+correctness contracts — virtual-clock purity, tracer fast-path guards,
+the jit-site registry, host-sync discipline, RNG stream salting, and
+hook wire/unwire pairing — at CI time, before any test runs.
+
+Entry point: ``python tools/lint/engine_lint.py [paths...]``; rule
+docs live in ``docs/static-analysis.md``.
+"""

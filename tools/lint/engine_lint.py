@@ -1,0 +1,110 @@
+"""Engine invariant linter — repo-specific static analysis (stdlib only).
+
+Runs the EL00x rules (tools/lint/rules/) over the tree and reports
+``path:line:col: RULE message`` findings:
+
+    python tools/lint/engine_lint.py                 # src tools benchmarks
+    python tools/lint/engine_lint.py src/repro/serving/engine.py
+    python tools/lint/engine_lint.py --select EL002,EL006 src
+    python tools/lint/engine_lint.py --list-rules
+
+Exit 0 when clean, 1 on any violation (or unparsable file). Rule docs:
+docs/static-analysis.md; pragma grammar: ``# el: allow[tag] -- reason``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+# runnable from the repo root without installing anything
+_ROOT = Path(__file__).resolve().parent.parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
+
+from tools.lint.framework import Rule, SourceFile, Violation  # noqa: E402
+from tools.lint.rules import ALL_RULES  # noqa: E402
+
+SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "experiments"}
+DEFAULT_PATHS = ("src", "tools", "benchmarks")
+
+
+def collect_files(paths: list[Path]) -> list[Path]:
+    out: list[Path] = []
+    for path in paths:
+        if path.is_file() and path.suffix == ".py":
+            out.append(path)
+        elif path.is_dir():
+            for sub in sorted(path.rglob("*.py")):
+                if not any(part in SKIP_DIRS for part in sub.parts):
+                    out.append(sub)
+    return out
+
+
+def run(paths: list[Path], root: Path,
+        rules: list[Rule]) -> list[Violation]:
+    violations: list[Violation] = []
+    for path in collect_files(paths):
+        try:
+            src = SourceFile.load(path, root)
+        except SyntaxError as exc:
+            violations.append(Violation(
+                "EL000", str(path), exc.lineno or 0, exc.offset or 0,
+                f"unparsable file: {exc.msg}"))
+            continue
+        violations.extend(src.unknown_pragma_violations())
+        for rule in rules:
+            if rule.applies(src.relpath):
+                violations.extend(rule.check(src))
+    for rule in rules:
+        violations.extend(rule.finalize())
+    return sorted(violations, key=Violation.sort_key)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="engine invariant linter (see docs/static-analysis.md)")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    rules: list[Rule] = [cls() for cls in ALL_RULES]
+    if args.list_rules:
+        for rule in rules:
+            tag = f" (pragma: {rule.pragma_tag})" if rule.pragma_tag else ""
+            print(f"{rule.rule_id}{tag}: {rule.description}")
+        return 0
+    if args.select:
+        wanted = {r.strip().upper() for r in args.select.split(",")}
+        unknown = wanted - {r.rule_id for r in rules}
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+        rules = [r for r in rules if r.rule_id in wanted]
+
+    paths = [Path(p) if Path(p).is_absolute() else _ROOT / p
+             for p in args.paths]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        for p in missing:
+            print(f"{p}: no such file or directory", file=sys.stderr)
+        return 2
+
+    violations = run(paths, _ROOT, rules)
+    for v in violations:
+        print(v.render())
+    n_files = len(collect_files(paths))
+    print(f"# engine_lint: {n_files} files, "
+          f"{len(rules)} rules, {len(violations)} violations",
+          file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,214 @@
+"""Shared infrastructure for the engine invariant linter.
+
+Everything here is stdlib-only (``ast`` + ``tokenize``): the linter must
+run in every CI lane and in the dev container without a single install.
+
+The pieces a rule module needs:
+
+* :class:`SourceFile` — a parsed file: source text, AST, and the
+  ``# el: allow[tag]`` pragma map (comment tokens only, so a pragma
+  spelled inside a string literal never suppresses anything).
+* :class:`Rule` — the base class. A rule declares ``rule_id`` /
+  ``pragma_tag`` / ``description``, scopes itself via ``applies``,
+  reports per-file findings from ``check`` and cross-file findings from
+  ``finalize``, and routes every finding through ``report`` so pragma
+  suppression behaves identically across rules.
+* :class:`ImportMap` / ``resolve_call_target`` — dotted-name resolution
+  (``np.random.default_rng`` → ``numpy.random.default_rng``) through the
+  file's imports, so rules match *what is called*, not how it is spelled.
+
+Pragma grammar (one line, same physical line as the flagged node):
+
+    # el: allow[tag]            single suppression
+    # el: allow[tag1,tag2]      several tags
+    # el: allow[tag] -- reason  trailing free-text rationale
+
+Unknown tags are themselves a violation (``EL000``): a stale pragma must
+not silently rot into a lie about what is being suppressed.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass
+from pathlib import Path
+
+PRAGMA_RE = re.compile(r"#\s*el:\s*allow\[([A-Za-z0-9_\-, ]+)\]")
+
+#: every tag a shipped rule understands (EL000 flags anything else)
+KNOWN_TAGS = frozenset(
+    {"clock", "tracer", "jit", "host-sync", "rng-stream", "hook"}
+)
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One finding: ``path:line:col: RULE message`` when rendered."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def sort_key(self) -> tuple[str, int, int, str]:
+        return (self.path, self.line, self.col, self.rule)
+
+
+def parse_pragmas(text: str) -> dict[int, set[str]]:
+    """Map line number → set of allowed tags, from comment tokens only."""
+    pragmas: dict[int, set[str]] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = PRAGMA_RE.search(tok.string)
+            if m is None:
+                continue
+            tags = {t.strip() for t in m.group(1).split(",") if t.strip()}
+            pragmas.setdefault(tok.start[0], set()).update(tags)
+    except tokenize.TokenError:
+        # the ast parse will report the real syntax problem
+        pass
+    return pragmas
+
+
+@dataclass
+class SourceFile:
+    """A parsed Python file plus its pragma map.
+
+    ``relpath`` is repo-root-relative with posix separators — it is the
+    path violations render with *and* the key rule scopes match on.
+    """
+
+    path: Path
+    relpath: str
+    text: str
+    tree: ast.Module
+    pragmas: dict[int, set[str]]
+
+    @classmethod
+    def load(cls, path: Path, root: Path) -> "SourceFile":
+        text = path.read_text(encoding="utf-8")
+        tree = ast.parse(text, filename=str(path))
+        try:
+            rel = path.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:  # explicit file argument outside the repo
+            rel = path.as_posix()
+        return cls(path=path, relpath=rel, text=text, tree=tree,
+                   pragmas=parse_pragmas(text))
+
+    def allows(self, line: int, tag: str) -> bool:
+        return tag in self.pragmas.get(line, set())
+
+    def unknown_pragma_violations(self) -> list[Violation]:
+        out = []
+        for line, tags in sorted(self.pragmas.items()):
+            for tag in sorted(tags - KNOWN_TAGS):
+                out.append(Violation(
+                    "EL000", self.relpath, line, 0,
+                    f"unknown pragma tag '{tag}' (known: "
+                    f"{', '.join(sorted(KNOWN_TAGS))})"))
+        return out
+
+
+class ImportMap:
+    """Name → fully dotted module/attribute path, from a module's imports.
+
+    ``import numpy as np``                → ``np``: ``numpy``
+    ``from numpy.random import default_rng`` → ``default_rng``:
+    ``numpy.random.default_rng``
+    """
+
+    def __init__(self, tree: ast.Module) -> None:
+        self.names: dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    self.names[alias.asname or alias.name.split(".")[0]] = (
+                        alias.name if alias.asname else
+                        alias.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    self.names[alias.asname or alias.name] = (
+                        f"{node.module}.{alias.name}")
+
+    def resolve(self, node: ast.expr) -> str | None:
+        """Dotted path of a Name/Attribute chain through the imports, or
+        None when the root is not an imported name."""
+        parts: list[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return None
+        root = self.names.get(cur.id)
+        if root is None:
+            return None
+        return ".".join([root] + list(reversed(parts)))
+
+
+def dotted(node: ast.expr) -> str | None:
+    """``a.b.c`` for a pure Name/Attribute chain, else None. Used where
+    identity matters lexically (hook targets, alias tracking) rather
+    than through imports."""
+    parts: list[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    parts.append(cur.id)
+    return ".".join(reversed(parts))
+
+
+class Rule:
+    """Base class for one invariant.
+
+    Subclasses set the class attributes, scope themselves via
+    ``applies(relpath)``, and yield findings from ``check`` (per file)
+    and optionally ``finalize`` (after every in-scope file was seen —
+    for cross-file state like EL005's salt-uniqueness map).
+    """
+
+    rule_id: str = "EL???"
+    pragma_tag: str = ""
+    description: str = ""
+
+    def applies(self, relpath: str) -> bool:
+        raise NotImplementedError
+
+    def check(self, src: SourceFile) -> list[Violation]:
+        raise NotImplementedError
+
+    def finalize(self) -> list[Violation]:
+        return []
+
+    def report(self, src: SourceFile, node: ast.AST,
+               message: str) -> Violation | None:
+        """A finding at ``node``, unless its line carries this rule's
+        pragma tag."""
+        line = getattr(node, "lineno", 0)
+        col = getattr(node, "col_offset", 0)
+        if self.pragma_tag and src.allows(line, self.pragma_tag):
+            return None
+        return Violation(self.rule_id, src.relpath, line, col, message)
+
+
+def in_scope(relpath: str, prefixes: tuple[str, ...],
+             exclude: tuple[str, ...] = ()) -> bool:
+    """Prefix-based scoping shared by the rules."""
+    if relpath in exclude:
+        return False
+    return relpath.startswith(prefixes)

@@ -1,0 +1,23 @@
+"""Rule registry: one module per invariant, collected here.
+
+Adding a rule = adding a module with a ``Rule`` subclass and listing it
+in ``ALL_RULES`` (docs/static-analysis.md walks through the recipe).
+"""
+
+from __future__ import annotations
+
+from tools.lint.rules.el001_clock import ClockPurityRule
+from tools.lint.rules.el002_tracer import TracerGuardRule
+from tools.lint.rules.el003_jit_registry import JitRegistryRule
+from tools.lint.rules.el004_host_sync import HostSyncRule
+from tools.lint.rules.el005_rng import RngStreamRule
+from tools.lint.rules.el006_hooks import HookHygieneRule
+
+ALL_RULES = (
+    ClockPurityRule,
+    TracerGuardRule,
+    JitRegistryRule,
+    HostSyncRule,
+    RngStreamRule,
+    HookHygieneRule,
+)

@@ -1,0 +1,82 @@
+"""EL001 — virtual-clock purity.
+
+The engine's clock is *virtual*: ``serve()`` advances ``now`` by the
+measured duration of jit'd steps (scaled by ``time_scale``), never by
+reading a wall clock mid-run. Any stray ``time.time()`` /
+``datetime.now()`` in serving/core silently couples simulated results to
+host load; any ambient-RNG call (``random.*``, numpy's global RNG,
+unseeded ``default_rng()``) breaks replay determinism — the two failure
+modes the whole regression harness (bit-identical streams across
+policies/backends) is built on excluding.
+
+The only sanctioned wall-clock reads are the ``_timed`` measurement
+sites themselves, which carry ``# el: allow[clock]`` pragmas.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.framework import (
+    ImportMap, Rule, SourceFile, Violation, in_scope)
+
+SCOPE = ("src/repro/serving/", "src/repro/core/")
+
+# wall-clock reads (time module) and naive-datetime factories
+BANNED_CALLS = {
+    "time.time": "wall-clock read",
+    "time.monotonic": "wall-clock read",
+    "time.perf_counter": "wall-clock read",
+    "time.process_time": "wall-clock read",
+    "time.time_ns": "wall-clock read",
+    "time.monotonic_ns": "wall-clock read",
+    "time.perf_counter_ns": "wall-clock read",
+    "datetime.datetime.now": "wall-clock read",
+    "datetime.datetime.utcnow": "wall-clock read",
+    "datetime.datetime.today": "wall-clock read",
+    "datetime.date.today": "wall-clock read",
+}
+
+
+class ClockPurityRule(Rule):
+    rule_id = "EL001"
+    pragma_tag = "clock"
+    description = ("no wall-clock or ambient-RNG calls in serving/core "
+                   "(engine time is virtual; randomness comes from "
+                   "salted seed streams)")
+
+    def applies(self, relpath: str) -> bool:
+        return in_scope(relpath, SCOPE)
+
+    def check(self, src: SourceFile) -> list[Violation]:
+        imports = ImportMap(src.tree)
+        out: list[Violation] = []
+
+        def add(node: ast.AST, msg: str) -> None:
+            v = self.report(src, node, msg)
+            if v is not None:
+                out.append(v)
+
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = imports.resolve(node.func)
+            if target is None:
+                continue
+            if target in BANNED_CALLS:
+                add(node, f"{BANNED_CALLS[target]} `{target}()` — engine "
+                          f"time is virtual (advance the clock from "
+                          f"measured step durations, or pragma a "
+                          f"measurement site with `# el: allow[clock]`)")
+            elif target == "random" or target.startswith("random."):
+                add(node, f"stdlib ambient RNG `{target}()` — use a "
+                          f"dedicated `np.random.default_rng([seed, "
+                          f"salt])` stream")
+            elif target.startswith("numpy.random.") \
+                    and target != "numpy.random.default_rng":
+                add(node, f"numpy global-state RNG `{target}()` — use a "
+                          f"dedicated `np.random.default_rng([seed, "
+                          f"salt])` stream")
+            elif target == "numpy.random.default_rng" and not node.args:
+                add(node, "unseeded `default_rng()` — entropy-seeded "
+                          "streams are unreplayable; pass `[seed, salt]`")
+        return out

@@ -1,0 +1,222 @@
+"""EL002 — tracer fast-path guards.
+
+PR 9's contract: with ``tracer=None`` the engine is **bit-identical** to
+the untraced engine, at the cost of one ``is not None`` test per event
+site. That only holds if every attribute use on a tracer object —
+``self.tracer.<attr>``, or an alias like ``tr = self.tracer`` followed
+by ``tr.<attr>`` — sits lexically inside a guard that proves the tracer
+is present (``if tr is not None:``, the true arm of
+``x if tr is not None else y``, an ``X is not None and ...`` chain, an
+early ``if tr is None: return``, or ``assert tr is not None``). An
+unguarded use is an AttributeError waiting on the fast path.
+
+Scope: serving/ + core/, minus ``serving/trace.py`` (the tracer itself).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.framework import (
+    Rule, SourceFile, Violation, dotted, in_scope)
+
+SCOPE = ("src/repro/serving/", "src/repro/core/")
+EXCLUDE = ("src/repro/serving/trace.py",)
+
+# a key identifying one tracer expression: ("name", alias) or
+# ("attr", "self.tracer")
+_Key = tuple[str, str]
+
+
+def _terminates(stmts: list[ast.stmt]) -> bool:
+    """True when control never falls off the end of ``stmts``."""
+    if not stmts:
+        return False
+    last = stmts[-1]
+    if isinstance(last, (ast.Return, ast.Raise, ast.Continue, ast.Break)):
+        return True
+    if isinstance(last, ast.If):
+        return _terminates(last.body) and _terminates(last.orelse)
+    return False
+
+
+class _FunctionChecker:
+    """Lexical guard analysis over one function (or the module body)."""
+
+    def __init__(self, rule: "TracerGuardRule", src: SourceFile,
+                 aliases: set[str]) -> None:
+        self.rule = rule
+        self.src = src
+        self.aliases = set(aliases)
+        self.violations: list[Violation] = []
+
+    # -- tracer-expression identity -------------------------------------
+
+    def key(self, node: ast.expr) -> _Key | None:
+        if isinstance(node, ast.Name) and node.id in self.aliases:
+            return ("name", node.id)
+        if isinstance(node, ast.Attribute) and node.attr == "tracer":
+            d = dotted(node)
+            if d is not None:
+                return ("attr", d)
+        return None
+
+    # -- guard extraction ------------------------------------------------
+
+    def guards(self, test: ast.expr) -> tuple[set[_Key], set[_Key]]:
+        """(keys proven non-None when true, when false)."""
+        if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+                and isinstance(test.comparators[0], ast.Constant) \
+                and test.comparators[0].value is None:
+            k = self.key(test.left)
+            if k is not None:
+                if isinstance(test.ops[0], ast.IsNot):
+                    return {k}, set()
+                if isinstance(test.ops[0], ast.Is):
+                    return set(), {k}
+            return set(), set()
+        if isinstance(test, ast.BoolOp):
+            pos: set[_Key] = set()
+            neg: set[_Key] = set()
+            for value in test.values:
+                p, n = self.guards(value)
+                if isinstance(test.op, ast.And):
+                    pos |= p
+                else:
+                    neg |= n
+            return (pos, set()) if isinstance(test.op, ast.And) \
+                else (set(), neg)
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            p, n = self.guards(test.operand)
+            return n, p
+        # bare truthiness (`if tr:`) proves non-None too
+        k = self.key(test)
+        if k is not None:
+            return {k}, set()
+        return set(), set()
+
+    # -- statement walk ---------------------------------------------------
+
+    def run(self, body: list[ast.stmt]) -> list[Violation]:
+        self.visit_stmts(body, frozenset())
+        return self.violations
+
+    def visit_stmts(self, stmts: list[ast.stmt],
+                    guarded: frozenset) -> None:
+        g = guarded
+        for stmt in stmts:
+            g = self.visit_stmt(stmt, g)
+
+    def visit_stmt(self, stmt: ast.stmt,
+                   guarded: frozenset) -> frozenset:
+        """Check one statement; returns the guard set for the *next*
+        statement in the block (grown by asserts / early returns)."""
+        if isinstance(stmt, ast.Assign):
+            self.expr(stmt.value, guarded)
+            for target in stmt.targets:
+                self.expr(target, guarded)
+            if len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                name = stmt.targets[0].id
+                if self.key(stmt.value) is not None:
+                    self.aliases.add(name)
+                else:
+                    self.aliases.discard(name)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self.expr(stmt.value, guarded)
+            self.expr(stmt.target, guarded)
+        elif isinstance(stmt, ast.AugAssign):
+            self.expr(stmt.value, guarded)
+            self.expr(stmt.target, guarded)
+        elif isinstance(stmt, ast.If):
+            self.expr(stmt.test, guarded)
+            pos, neg = self.guards(stmt.test)
+            self.visit_stmts(stmt.body, guarded | pos)
+            self.visit_stmts(stmt.orelse, guarded | neg)
+            # `if tr is None: return` guards the rest of the block
+            if neg and _terminates(stmt.body) and not stmt.orelse:
+                return guarded | neg
+        elif isinstance(stmt, ast.Assert):
+            pos, _ = self.guards(stmt.test)
+            self.expr(stmt.test, guarded)
+            return guarded | pos
+        elif isinstance(stmt, ast.While):
+            self.expr(stmt.test, guarded)
+            pos, _ = self.guards(stmt.test)
+            self.visit_stmts(stmt.body, guarded | pos)
+            self.visit_stmts(stmt.orelse, guarded)
+        elif isinstance(stmt, ast.For):
+            self.expr(stmt.iter, guarded)
+            self.visit_stmts(stmt.body, guarded)
+            self.visit_stmts(stmt.orelse, guarded)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.expr(item.context_expr, guarded)
+            self.visit_stmts(stmt.body, guarded)
+        elif isinstance(stmt, ast.Try):
+            self.visit_stmts(stmt.body, guarded)
+            for handler in stmt.handlers:
+                self.visit_stmts(handler.body, guarded)
+            self.visit_stmts(stmt.orelse, guarded)
+            self.visit_stmts(stmt.finalbody, guarded)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested def: new lexical region — guards from the enclosing
+            # scope do not hold at (deferred) call time
+            sub = _FunctionChecker(self.rule, self.src, self.aliases)
+            sub.visit_stmts(stmt.body, frozenset())
+            self.violations.extend(sub.violations)
+        elif isinstance(stmt, ast.ClassDef):
+            self.visit_stmts(stmt.body, guarded)
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self.expr(child, guarded)
+        return guarded
+
+    # -- expression walk --------------------------------------------------
+
+    def expr(self, node: ast.expr, guarded: frozenset) -> None:
+        if isinstance(node, ast.Attribute):
+            k = self.key(node.value)
+            if k is not None and k not in guarded:
+                label = k[1] if k[0] == "attr" else k[1]
+                v = self.rule.report(
+                    self.src, node,
+                    f"unguarded tracer attribute `{label}.{node.attr}` — "
+                    f"wrap in `if {label} is not None:` (the tracer=None "
+                    f"fast path must never touch the tracer)")
+                if v is not None:
+                    self.violations.append(v)
+            self.expr(node.value, guarded)
+            return
+        if isinstance(node, ast.IfExp):
+            self.expr(node.test, guarded)
+            pos, neg = self.guards(node.test)
+            self.expr(node.body, guarded | pos)
+            self.expr(node.orelse, guarded | neg)
+            return
+        if isinstance(node, ast.BoolOp):
+            g = guarded
+            for value in node.values:
+                self.expr(value, g)
+                pos, neg = self.guards(value)
+                g = g | pos if isinstance(node.op, ast.And) else g | neg
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.expr(child, guarded)
+
+
+class TracerGuardRule(Rule):
+    rule_id = "EL002"
+    pragma_tag = "tracer"
+    description = ("every tracer attribute use must sit inside an "
+                   "`is not None` guard (tracer=None fast path stays "
+                   "bit-identical)")
+
+    def applies(self, relpath: str) -> bool:
+        return in_scope(relpath, SCOPE, exclude=EXCLUDE)
+
+    def check(self, src: SourceFile) -> list[Violation]:
+        checker = _FunctionChecker(self, src, aliases=set())
+        return checker.run(src.tree.body)

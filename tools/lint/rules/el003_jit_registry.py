@@ -1,0 +1,173 @@
+"""EL003 — jit-site registry.
+
+The engine's compile-cache bound (docs/observability.md, PR 9's runtime
+watchdog) is only auditable if the set of jit entry points is known. A
+new ``jax.jit`` / ``partial(jax.jit, ...)`` site anywhere under
+``src/repro/`` is a new compile-cache dimension: it must be registered
+in ``tools/lint/jit_registry.json`` with a human-written note declaring
+its static arguments and shape-bucket story. The registry makes adding
+a jit site a conscious, reviewed act — the static complement of the
+runtime recompile watchdog.
+
+Site identity is ``relpath::scope::bound_name`` (scope = enclosing
+class/function qualname, bound name = assignment target or decorated
+function), so entries survive line-number churn. Stale entries (file
+scanned, site gone) are violations too: a registry that over-claims is
+as misleading as one that under-claims.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+
+from tools.lint.framework import (
+    ImportMap, Rule, SourceFile, Violation, in_scope)
+
+SCOPE = ("src/repro/",)
+REGISTRY_PATH = Path(__file__).resolve().parent.parent / "jit_registry.json"
+REGISTRY_RELPATH = "tools/lint/jit_registry.json"
+
+
+def load_registry(path: Path = REGISTRY_PATH) -> dict[str, str]:
+    data = json.loads(path.read_text(encoding="utf-8"))
+    sites = data.get("sites", {})
+    if not isinstance(sites, dict):
+        raise ValueError(f"{path}: 'sites' must be an object")
+    return {str(k): str(v) for k, v in sites.items()}
+
+
+class JitRegistryRule(Rule):
+    rule_id = "EL003"
+    pragma_tag = "jit"
+    description = ("every jax.jit site in src/repro/ must appear in "
+                   "tools/lint/jit_registry.json with a static-argnames/"
+                   "shape-bucket note")
+
+    def __init__(self, registry: dict[str, str] | None = None) -> None:
+        if registry is None:
+            registry = load_registry() if REGISTRY_PATH.exists() else {}
+        self.registry = registry
+        self.seen: dict[str, ast.AST] = {}
+        self.scanned_files: set[str] = set()
+
+    def applies(self, relpath: str) -> bool:
+        return in_scope(relpath, SCOPE)
+
+    # -- jit-call detection ----------------------------------------------
+
+    @staticmethod
+    def _is_jit(node: ast.expr, imports: ImportMap) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        target = imports.resolve(node.func)
+        if target == "jax.jit":
+            return True
+        if target == "functools.partial" and node.args:
+            return imports.resolve(node.args[0]) == "jax.jit"
+        return False
+
+    @classmethod
+    def _find_jit_calls(cls, node: ast.AST,
+                        imports: ImportMap) -> list[ast.Call]:
+        out = []
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.expr) and cls._is_jit(sub, imports):
+                out.append(sub)
+        return out
+
+    # -- site enumeration -------------------------------------------------
+
+    def check(self, src: SourceFile) -> list[Violation]:
+        imports = ImportMap(src.tree)
+        self.scanned_files.add(src.relpath)
+        out: list[Violation] = []
+        counters: dict[str, int] = {}
+
+        def record(scope: list[str], bound: str, node: ast.expr) -> None:
+            base = f"{src.relpath}::{'.'.join(scope) or '<module>'}::{bound}"
+            n = counters.get(base, 0)
+            counters[base] = n + 1
+            site = base if n == 0 else f"{base}#{n + 1}"
+            self.seen[site] = node
+            if site not in self.registry:
+                v = self.report(
+                    src, node,
+                    f"unregistered jit site `{site}` — add it to "
+                    f"{REGISTRY_RELPATH} with a static-argnames/"
+                    f"shape-bucket note")
+                if v is not None:
+                    out.append(v)
+
+        def visit_body(stmts: list[ast.stmt], scope: list[str]) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    for dec in stmt.decorator_list:
+                        # bare `@jax.jit` (no call parens)
+                        if imports.resolve(dec) == "jax.jit" \
+                                and isinstance(dec, (ast.Name,
+                                                     ast.Attribute)):
+                            record(scope, stmt.name, dec)
+                        for call in self._find_jit_calls(dec, imports):
+                            record(scope, stmt.name, call)
+                    visit_body(stmt.body, scope + [stmt.name])
+                elif isinstance(stmt, ast.ClassDef):
+                    visit_body(stmt.body, scope + [stmt.name])
+                elif isinstance(stmt, (ast.Assign, ast.AnnAssign,
+                                       ast.AugAssign)):
+                    value = stmt.value
+                    if value is None:
+                        continue
+                    target = (stmt.targets[0]
+                              if isinstance(stmt, ast.Assign)
+                              else stmt.target)
+                    try:
+                        bound = ast.unparse(target)
+                    except Exception:
+                        bound = "<target>"
+                    for call in self._find_jit_calls(value, imports):
+                        record(scope, bound, call)
+                elif isinstance(stmt, (ast.If, ast.For, ast.While,
+                                       ast.With, ast.Try)):
+                    # same binding scope, just nested control flow
+                    for field in ("body", "orelse", "finalbody"):
+                        sub = getattr(stmt, field, None)
+                        if isinstance(sub, list) and sub:
+                            visit_body(sub, scope)
+                    for handler in getattr(stmt, "handlers", []):
+                        visit_body(handler.body, scope)
+                    if isinstance(stmt, (ast.If, ast.While)):
+                        for call in self._find_jit_calls(stmt.test,
+                                                         imports):
+                            record(scope, "<anonymous>", call)
+                    if isinstance(stmt, ast.For):
+                        for call in self._find_jit_calls(stmt.iter,
+                                                         imports):
+                            record(scope, "<anonymous>", call)
+                else:
+                    for call in self._find_jit_calls(stmt, imports):
+                        record(scope, "<anonymous>", call)
+
+        visit_body(src.tree.body, [])
+        return out
+
+    # -- registry hygiene --------------------------------------------------
+
+    def finalize(self) -> list[Violation]:
+        out: list[Violation] = []
+        for site, note in sorted(self.registry.items()):
+            if not note.strip():
+                out.append(Violation(
+                    self.rule_id, REGISTRY_RELPATH, 1, 0,
+                    f"registry entry `{site}` has an empty note — declare "
+                    f"its static argnames / shape-bucket story"))
+            site_file = site.split("::", 1)[0]
+            base = site.split("#", 1)[0]
+            if site_file in self.scanned_files and site not in self.seen \
+                    and base not in self.seen:
+                out.append(Violation(
+                    self.rule_id, REGISTRY_RELPATH, 1, 0,
+                    f"stale registry entry `{site}` — no such jit site "
+                    f"in {site_file} (remove or update the entry)"))
+        return out

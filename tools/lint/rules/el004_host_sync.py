@@ -1,0 +1,111 @@
+"""EL004 — host syncs in the engine step loop.
+
+``self._timed(...)`` returns ``(out, dt)`` where ``out`` is a device
+value the engine deliberately keeps asynchronous: the step loop's
+throughput story depends on *not* blocking on device results except at
+the few sanctioned points (token materialization for the output stream,
+router scores for host-side argmax). Any other ``np.asarray`` /
+``float(...)`` / ``.item()`` / ``jax.device_get`` on a ``_timed``
+output is a hidden device round-trip in the hot path.
+
+Intraprocedural: names bound from the *first* element of a ``_timed``
+unpack (including nested tuple unpacks) are tainted; sanctioned syncs
+carry ``# el: allow[host-sync]`` with a reason.
+
+Scope: the step-loop module(s) listed in ``HOT_MODULES``.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.framework import ImportMap, Rule, SourceFile, Violation
+
+HOT_MODULES = ("src/repro/serving/engine.py",)
+
+_SYNC_CALLS = {
+    "numpy.asarray": "np.asarray",
+    "numpy.array": "np.array",
+    "jax.device_get": "jax.device_get",
+}
+_SYNC_BUILTINS = {"float", "int", "bool"}
+
+
+def _names_in(target: ast.expr) -> list[str]:
+    return [n.id for n in ast.walk(target) if isinstance(n, ast.Name)]
+
+
+class HostSyncRule(Rule):
+    rule_id = "EL004"
+    pragma_tag = "host-sync"
+    description = ("no un-pragma'd host syncs (.item()/float()/"
+                   "np.asarray/jax.device_get) on _timed outputs in the "
+                   "engine step loop")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath in HOT_MODULES
+
+    def check(self, src: SourceFile) -> list[Violation]:
+        imports = ImportMap(src.tree)
+        out: list[Violation] = []
+        for node in ast.walk(src.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.extend(self._check_function(src, imports, node))
+        return out
+
+    def _check_function(self, src: SourceFile, imports: ImportMap,
+                        func: ast.AST) -> list[Violation]:
+        tainted: set[str] = set()
+        # pass 1: names bound from _timed device outputs
+        for node in ast.walk(func):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)
+                    and isinstance(node.value.func, ast.Attribute)
+                    and node.value.func.attr == "_timed"):
+                continue
+            for target in node.targets:
+                if isinstance(target, ast.Tuple) and target.elts:
+                    # `(out, dt) = self._timed(...)`: out is the device
+                    # value; dt is the already-host duration float
+                    tainted.update(_names_in(target.elts[0]))
+                elif isinstance(target, ast.Name):
+                    tainted.add(target.id)
+        if not tainted:
+            return []
+
+        # pass 2: host syncs on tainted names
+        out: list[Violation] = []
+
+        def flag(node: ast.AST, what: str, name: str) -> None:
+            v = self.report(
+                src, node,
+                f"host sync `{what}` on device value `{name}` (a _timed "
+                f"output) in the step loop — if this round-trip is "
+                f"intentional, pragma it with a reason: "
+                f"`# el: allow[host-sync] -- why`")
+            if v is not None:
+                out.append(v)
+
+        for node in ast.walk(func):
+            if not isinstance(node, ast.Call):
+                continue
+            func_expr = node.func
+            # x.item()
+            if isinstance(func_expr, ast.Attribute) \
+                    and func_expr.attr == "item" \
+                    and isinstance(func_expr.value, ast.Name) \
+                    and func_expr.value.id in tainted:
+                flag(node, f"{func_expr.value.id}.item()",
+                     func_expr.value.id)
+                continue
+            if not node.args or not isinstance(node.args[0], ast.Name):
+                continue
+            arg = node.args[0].id
+            if arg not in tainted:
+                continue
+            resolved = imports.resolve(func_expr)
+            if resolved in _SYNC_CALLS:
+                flag(node, f"{_SYNC_CALLS[resolved]}({arg})", arg)
+            elif isinstance(func_expr, ast.Name) \
+                    and func_expr.id in _SYNC_BUILTINS:
+                flag(node, f"{func_expr.id}({arg})", arg)
+        return out

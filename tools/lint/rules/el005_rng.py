@@ -1,0 +1,115 @@
+"""EL005 — RNG stream discipline.
+
+Every random draw in workload generation and serving comes from a
+dedicated ``np.random.default_rng([seed, salt])`` stream: the salt
+separates consumers so adding a draw to one stream can never shift the
+values another stream produces (the trace-shifting bug class PR 4/PR 6
+regression-tested against — e.g. system-prompt generation must not
+perturb arrival times).
+
+Checked per call site in serving/core scope:
+
+* the seed argument must be a ``[seed, salt]`` list/tuple (a bare
+  ``default_rng(seed)`` is one global stream in disguise);
+* constant salts (literal or module-level constant) must be **distinct**
+  across the scope — a duplicate salt is two "independent" consumers
+  silently sharing a stream;
+* dynamic salts (e.g. ``request.request_id``) are fine — they are
+  per-entity streams by construction.
+
+The one historical whole-run stream (workload arrivals) carries
+``# el: allow[rng-stream]``; new code gets its own salt instead.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.framework import (
+    ImportMap, Rule, SourceFile, Violation, in_scope)
+
+SCOPE = ("src/repro/serving/", "src/repro/core/")
+
+
+class RngStreamRule(Rule):
+    rule_id = "EL005"
+    pragma_tag = "rng-stream"
+    description = ("default_rng in serving/core must take a [seed, salt] "
+                   "list with a distinct salt per consumer")
+
+    def __init__(self) -> None:
+        # constant salt value -> list of (relpath, line, col)
+        self.salts: dict[int, list[tuple[str, int, int]]] = {}
+
+    def applies(self, relpath: str) -> bool:
+        return in_scope(relpath, SCOPE)
+
+    @staticmethod
+    def _module_constants(tree: ast.Module) -> dict[str, int]:
+        consts: dict[str, int] = {}
+        for stmt in tree.body:
+            if isinstance(stmt, ast.Assign) \
+                    and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and isinstance(stmt.value, ast.Constant) \
+                    and isinstance(stmt.value.value, int):
+                consts[stmt.targets[0].id] = stmt.value.value
+        return consts
+
+    def check(self, src: SourceFile) -> list[Violation]:
+        imports = ImportMap(src.tree)
+        consts = self._module_constants(src.tree)
+        out: list[Violation] = []
+
+        def add(node: ast.AST, msg: str) -> None:
+            v = self.report(src, node, msg)
+            if v is not None:
+                out.append(v)
+
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if imports.resolve(node.func) != "numpy.random.default_rng":
+                continue
+            if self.pragma_tag and src.allows(node.lineno, self.pragma_tag):
+                continue
+            if not node.args:
+                add(node, "unseeded `default_rng()` — pass a "
+                          "`[seed, salt]` list (replayable, dedicated "
+                          "stream)")
+                continue
+            seed = node.args[0]
+            if not isinstance(seed, (ast.List, ast.Tuple)):
+                add(node, "`default_rng(seed)` without a salt — pass "
+                          "`[seed, salt]` so this consumer gets a "
+                          "dedicated stream (drawing from a shared "
+                          "stream shifts every later draw)")
+                continue
+            if len(seed.elts) < 2:
+                add(node, "seed list needs both elements: "
+                          "`[seed, salt]`")
+                continue
+            salt = seed.elts[1]
+            value: int | None = None
+            if isinstance(salt, ast.Constant) \
+                    and isinstance(salt.value, int):
+                value = salt.value
+            elif isinstance(salt, ast.Name) and salt.id in consts:
+                value = consts[salt.id]
+            if value is not None:
+                self.salts.setdefault(value, []).append(
+                    (src.relpath, node.lineno, node.col_offset))
+        return out
+
+    def finalize(self) -> list[Violation]:
+        out: list[Violation] = []
+        for value, sites in sorted(self.salts.items()):
+            if len(sites) < 2:
+                continue
+            first = sites[0]
+            for path, line, col in sites[1:]:
+                out.append(Violation(
+                    self.rule_id, path, line, col,
+                    f"duplicate RNG salt {value:#x} — already used at "
+                    f"{first[0]}:{first[1]}; two consumers sharing a "
+                    f"salt share a stream (pick a fresh constant)"))
+        return out

@@ -1,0 +1,101 @@
+"""EL006 — hook hygiene.
+
+The tracer observes the adapter channel and KV arena through
+``on_event`` hooks the engine wires at serve() start. A wired hook that
+outlives its serve() is a leak with teeth: the next (possibly untraced)
+run would fire events into a finished tracer, and the tracer=None
+fast-path guarantee dies. So every ``X.on_event = <hook>`` wiring must
+sit inside a ``try`` whose ``finally`` unwires the *same* target
+(``X.on_event = None``) — mid-loop exceptions (strict-watchdog raises,
+pool errors escaping) must unwire too.
+
+``X.on_event = None`` itself (the unwire, or an ``__init__`` default)
+is always allowed.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.lint.framework import (
+    Rule, SourceFile, Violation, dotted, in_scope)
+
+SCOPE = ("src/repro/",)
+HOOK_ATTR = "on_event"
+
+
+def _is_none(node: ast.expr | None) -> bool:
+    return isinstance(node, ast.Constant) and node.value is None
+
+
+def _unwires(stmts: list[ast.stmt], target: str) -> bool:
+    """Does this (finally) block, anywhere in it, assign ``target = None``?"""
+    for stmt in stmts:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Assign) and _is_none(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) \
+                            and dotted(t) == target:
+                        return True
+    return False
+
+
+class HookHygieneRule(Rule):
+    rule_id = "EL006"
+    pragma_tag = "hook"
+    description = ("every `X.on_event = hook` wiring needs a matching "
+                   "`X.on_event = None` in a `finally`")
+
+    def applies(self, relpath: str) -> bool:
+        return in_scope(relpath, SCOPE)
+
+    def check(self, src: SourceFile) -> list[Violation]:
+        out: list[Violation] = []
+
+        def visit(stmts: list[ast.stmt],
+                  tries: tuple[ast.Try, ...]) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, ast.Assign):
+                    self._check_assign(src, stmt, tries, out)
+                if isinstance(stmt, ast.Try):
+                    inner = tries + (stmt,)
+                    visit(stmt.body, inner)
+                    for handler in stmt.handlers:
+                        visit(handler.body, inner)
+                    visit(stmt.orelse, inner)
+                    # a wire *inside* the finally is not protected by it
+                    visit(stmt.finalbody, tries)
+                else:
+                    # recurse into nested statement lists (if/for/while/
+                    # with/def/class bodies)
+                    for field in ("body", "orelse", "finalbody"):
+                        sub = getattr(stmt, field, None)
+                        if isinstance(sub, list):
+                            subs = [s for s in sub
+                                    if isinstance(s, ast.stmt)]
+                            if subs:
+                                visit(subs, tries)
+
+        visit(src.tree.body, ())
+        return out
+
+    def _check_assign(self, src: SourceFile, stmt: ast.Assign,
+                      tries: tuple[ast.Try, ...],
+                      out: list[Violation]) -> None:
+        if _is_none(stmt.value):
+            return  # the unwire / a None default is always fine
+        for target in stmt.targets:
+            if not (isinstance(target, ast.Attribute)
+                    and target.attr == HOOK_ATTR):
+                continue
+            name = dotted(target)
+            if name is None:
+                continue
+            if any(_unwires(t.finalbody, name) for t in tries):
+                continue
+            v = self.report(
+                src, stmt,
+                f"`{name} = ...` wires an observer hook without a "
+                f"matching `{name} = None` in a `finally` — an "
+                f"exception here leaks the hook into the next run")
+            if v is not None:
+                out.append(v)

@@ -23,6 +23,7 @@ import argparse
 import json
 import sys
 from pathlib import Path
+from typing import Optional, Sequence
 
 # runnable from the repo root without installing the package
 _ROOT = Path(__file__).resolve().parent.parent
@@ -33,7 +34,7 @@ for p in (str(_ROOT), str(_ROOT / "src")):
 from benchmarks.schema import validate_trace_json  # noqa: E402
 
 
-def main(argv=None) -> int:
+def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace", help="TRACE_*.json written by serve --trace")
     ap.add_argument("-o", "--output", default=None,

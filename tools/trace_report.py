@@ -24,6 +24,7 @@ import argparse
 import json
 import sys
 from pathlib import Path
+from typing import IO, Optional, Sequence
 
 # runnable from the repo root without installing the package
 _ROOT = Path(__file__).resolve().parent.parent
@@ -46,7 +47,8 @@ def _breakdown_digest(bd: dict) -> str:
     return format_digest(fields)
 
 
-def report(data: dict, top: int = 5, out=sys.stdout) -> None:
+def report(data: dict, top: int = 5,
+           out: IO[str] = sys.stdout) -> None:
     section = data.get("edgelora") or {}
     meta = section.get("meta") or {}
     duration = float(section.get("duration") or 0.0)
@@ -98,7 +100,7 @@ def report(data: dict, top: int = 5, out=sys.stdout) -> None:
     print(f"\n== utilization ==\n  {format_digest(util)}", file=out)
 
     # -- scheduler events -------------------------------------------------
-    sched: dict = {}
+    sched: dict[str, int] = {}
     for ev in events:
         if ev.get("kind") == "sched":
             sched[ev["name"]] = sched.get(ev["name"], 0) + 1
@@ -124,7 +126,7 @@ def report(data: dict, top: int = 5, out=sys.stdout) -> None:
         print(f"    VIOLATION: {v}", file=out)
 
 
-def main(argv=None) -> int:
+def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace", help="TRACE_*.json written by serve --trace")
     ap.add_argument("--top", type=int, default=5,
